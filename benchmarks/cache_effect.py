@@ -1,0 +1,45 @@
+"""Beyond-paper: quantify the §V-B caching remark.
+
+The paper: "the search pattern of DSANN ... introduces unpredictability in
+partition access ... the effectiveness of caching is significantly
+constrained". We measure an LRU partition cache under (a) the uniform
+query workload the paper implies and (b) a zipf-skewed repeat workload
+(production traffic) on the DFS tier.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import N_SHARDS, BenchContext, emit
+from repro.core.search import SearchConfig, search_pag
+from repro.data.vectors import recall_at_k
+from repro.storage.simulator import ObjectStore, StorageConfig
+from repro.storage.cache import PartitionCache
+
+
+def main(ctx: BenchContext):
+    print("\n== Beyond-paper: partition cache (paper §V-B future work) ==")
+    ds = ctx.dataset("clustered")
+    pag, _ = ctx.pag("clustered", p=0.2, lam=3.0, redundancy=4)
+    rng = np.random.default_rng(0)
+    n_q = 600
+
+    workloads = {
+        "uniform": ds.queries[rng.integers(0, len(ds.queries), n_q)],
+        "zipf-skewed": ds.queries[np.minimum(
+            rng.zipf(1.5, n_q) - 1, len(ds.queries) - 1)],
+    }
+    cap = int(0.1 * 4 * ds.n * ds.d)  # cache ~10% of the residual bytes
+    for name, queries in workloads.items():
+        for cache in (None, PartitionCache(cap)):
+            store = ctx.pag_store("clustered", "dfs", pag, seed=9)
+            cfg = SearchConfig(L=64, k=10, n_probe_max=48, mode="async",
+                               cache=cache)
+            ids, _, st = search_pag(pag, ds.d, queries, store, cfg,
+                                    n_shards=N_SHARDS)
+            tag = "cached" if cache else "no-cache"
+            hr = cache.hit_rate if cache else 0.0
+            print(f"  {name:12s} {tag:9s} qps={st.qps():7.0f} "
+                  f"p99={st.p99()*1e3:6.2f}ms hit_rate={hr:.2f}")
+            emit(f"cache_effect/{name}/{tag}", 1e6 / max(st.qps(), 1e-9),
+                 f"qps={st.qps():.0f};hit_rate={hr:.2f}")

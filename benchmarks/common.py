@@ -1,0 +1,99 @@
+"""Shared benchmark context: datasets, lazily-built indexes, CSV emit.
+
+Every benchmark prints ``name,us_per_call,derived`` CSV rows (harness
+contract) plus a human-readable table; derived carries the figure-specific
+metric (recall, QPS, p99.9, ...).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.baselines.diskann import build_diskann
+from repro.baselines.hnsw import build_hnsw
+from repro.baselines.spann import build_spann
+from repro.core.pag import build_pag
+from repro.core.search import write_partitions
+from repro.data.vectors import VectorDataset, make_dataset, recall_at_k
+from repro.storage.simulator import ComputeModel, ObjectStore, StorageConfig
+
+N_SHARDS = 4
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+@dataclasses.dataclass
+class BenchContext:
+    n: int = 12000
+    d: int = 32
+    n_queries: int = 200
+    seed: int = 0
+    _cache: Dict = dataclasses.field(default_factory=dict)
+
+    def dataset(self, kind: str = "clustered") -> VectorDataset:
+        key = ("ds", kind)
+        if key not in self._cache:
+            self._cache[key] = make_dataset(
+                kind, n=self.n, d=self.d, n_queries=self.n_queries,
+                k_gt=100, seed=self.seed)
+        return self._cache[key]
+
+    def pag(self, kind: str = "clustered", **kw):
+        key = ("pag", kind, tuple(sorted(kw.items())))
+        if key not in self._cache:
+            ds = self.dataset(kind)
+            t0 = time.time()
+            pag = build_pag(ds.base, **kw)
+            self._cache[key] = (pag, time.time() - t0)
+        return self._cache[key]
+
+    def pag_store(self, kind: str, storage: str, pag, seed: int = 0):
+        store = ObjectStore(StorageConfig.preset(storage, seed=seed))
+        write_partitions(pag, self.dataset(kind).base, store,
+                         n_shards=N_SHARDS)
+        return store
+
+    def diskann(self, kind: str, storage: str):
+        key = ("dk", kind)
+        if key not in self._cache:
+            ds = self.dataset(kind)
+            store = ObjectStore(StorageConfig.preset(storage))
+            t0 = time.time()
+            idx = build_diskann(ds.base, store, R=16, L=48)
+            self._cache[key] = (idx, store, time.time() - t0)
+        idx, store, t = self._cache[key]
+        if store.cfg.kind != storage:  # rebind storage tier, reuse objects
+            new = ObjectStore(StorageConfig.preset(storage))
+            new._data = store._data
+            store = new
+        return idx, store, t
+
+    def spann(self, kind: str, storage: str):
+        key = ("sp", kind)
+        if key not in self._cache:
+            ds = self.dataset(kind)
+            store = ObjectStore(StorageConfig.preset(storage))
+            t0 = time.time()
+            idx = build_spann(ds.base, store, points_per_part=16)
+            self._cache[key] = (idx, store, time.time() - t0)
+        idx, store, t = self._cache[key]
+        if store.cfg.kind != storage:
+            new = ObjectStore(StorageConfig.preset(storage))
+            new._data = store._data
+            store = new
+        return idx, store, t
+
+    def hnsw(self, kind: str):
+        key = ("hn", kind)
+        if key not in self._cache:
+            ds = self.dataset(kind)
+            t0 = time.time()
+            idx = build_hnsw(ds.base, R=16, L=48)
+            self._cache[key] = (idx, time.time() - t0)
+        return self._cache[key]

@@ -1,0 +1,31 @@
+"""Paper Fig 13: DRS ablation — tail latency (p99/p99.9) of PAG vs PAG-N
+(no DRS), at matched recall budgets."""
+from __future__ import annotations
+
+from benchmarks.common import N_SHARDS, BenchContext, emit
+from repro.core.search import SearchConfig, search_pag
+from repro.data.vectors import recall_at_k
+
+
+def main(ctx: BenchContext):
+    print("\n== Fig 13 analogue: DRS tail-latency ablation ==")
+    ds = ctx.dataset("clustered")
+    results = {}
+    for name, kw in (("PAG", dict(use_drs=True, lam=3.0)),
+                     ("PAG-N", dict(use_drs=False))):
+        pag, _ = ctx.pag("clustered", p=0.2, redundancy=4, **kw)
+        store = ctx.pag_store("clustered", "dfs", pag, seed=4)
+        cfg = SearchConfig(L=64, k=10, n_probe_max=48, mode="async")
+        ids, _, st = search_pag(pag, ds.d, ds.queries, store, cfg,
+                                n_shards=N_SHARDS)
+        rec = recall_at_k(ids, ds.gt_ids, 10)
+        mx = pag.pcount[: pag.n_parts].max()
+        results[name] = (rec, st.p99(), st.p999(), mx)
+        print(f"  {name:6s} recall={rec:.3f} p99={st.p99()*1e3:.2f}ms "
+              f"p99.9={st.p999()*1e3:.2f}ms max_partition={mx}")
+        emit(f"drs_tail/{name}", st.p999() * 1e6,
+             f"recall={rec:.3f};p99={st.p99()*1e3:.3f}ms;"
+             f"p999={st.p999()*1e3:.3f}ms;max_part={mx}")
+    if results["PAG"][3] < results["PAG-N"][3]:
+        print("  >> DRS bounds the partition long tail "
+              f"({results['PAG'][3]} vs {results['PAG-N'][3]} points)")

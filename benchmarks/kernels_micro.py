@@ -1,0 +1,54 @@
+"""Kernel microbenchmarks.
+
+The Pallas kernels execute in interpret mode on this CPU container (their
+timing is not meaningful); what we CAN measure honestly on CPU is the
+jnp hot path each kernel replaces, plus correctness deltas. TPU wall-clock
+belongs to the roofline analysis.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import BenchContext, emit
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / iters
+
+
+def main(ctx: BenchContext):
+    print("\n== Kernel microbench (jnp path wall-clock; Pallas validated "
+          "in interpret mode) ==")
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (64, 128))
+    x = jax.random.normal(jax.random.PRNGKey(1), (100_000, 128))
+    t = _time(lambda a, b: ref.l2_topk_ref(a, b, 100), q, x)
+    print(f"  l2_topk ref (64x100k x128, k=100): {t*1e3:.1f} ms")
+    emit("kernels/l2_topk_ref", t * 1e6, "shape=64x100000x128;k=100")
+
+    lut = jax.random.uniform(key, (16, 256))
+    codes = jax.random.randint(key, (100_000, 16), 0, 256)
+    t = _time(ref.pq_adc_ref, lut, codes)
+    print(f"  pq_adc ref (100k x M16): {t*1e3:.1f} ms")
+    emit("kernels/pq_adc_ref", t * 1e6, "n=100000;M=16")
+
+    qq = jax.random.normal(key, (1, 4, 1024, 64), jnp.bfloat16)
+    t = _time(lambda a: ref.flash_attention_ref(a, a, a), qq)
+    print(f"  flash_attention ref (1x4x1024x64): {t*1e3:.1f} ms")
+    emit("kernels/flash_attention_ref", t * 1e6, "1x4x1024x64")
+
+    # interpret-mode agreement spot checks (cheap shapes)
+    d2, ids = ops.l2_topk(q[:8], x[:4096], k=10, interpret=True)
+    d2r, _ = ref.l2_topk_ref(q[:8], x[:4096], 10)
+    err = float(jnp.max(jnp.abs(d2 - d2r)))
+    print(f"  l2_topk pallas-vs-ref max err: {err:.2e}")
+    emit("kernels/l2_topk_pallas_err", 0.0, f"max_err={err:.2e}")

@@ -1,0 +1,47 @@
+"""LM substrate microbench: reduced-config train/decode step wall-clock
+(CPU) — regression guard for the serving/training loop, not a TPU number.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import BenchContext, emit
+from repro.configs import get_config
+from repro.data.lm import DataConfig, batch_at
+from repro.models import decode_step, init_cache, init_params
+from repro.training.optimizer import OptimizerConfig, init_state
+from repro.training.train_step import TrainConfig, make_train_step
+
+
+def main(ctx: BenchContext):
+    print("\n== LM substrate step times (reduced configs, CPU) ==")
+    for arch in ("tinyllama-1.1b", "mamba2-370m", "dbrx-132b"):
+        cfg = get_config(arch, reduced=True)
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        ocfg = OptimizerConfig()
+        opt = init_state(params, ocfg)
+        step = jax.jit(make_train_step(cfg, ocfg, TrainConfig()))
+        dcfg = DataConfig(seed=0, batch_size=4, seq_len=64)
+        batch = batch_at(dcfg, cfg, 0)
+        params, opt, _ = step(params, opt, batch)  # compile
+        t0 = time.time()
+        for s in range(1, 6):
+            params, opt, _ = jax.block_until_ready(
+                step(params, opt, batch_at(dcfg, cfg, s)))
+        t = (time.time() - t0) / 5
+        print(f"  {arch:18s} train_step: {t*1e3:7.1f} ms")
+        emit(f"lm_step/train/{arch}", t * 1e6, "reduced;b4s64")
+
+        cache = init_cache(cfg, 4, 64)
+        dec = jax.jit(lambda p, t_, c, i: decode_step(p, t_, c, i, cfg))
+        tok = batch["tokens"][:, :1]
+        logits, cache = dec(params, tok, cache, 0)  # compile
+        t0 = time.time()
+        for i in range(1, 9):
+            logits, cache = dec(params, tok, cache, i)
+        jax.block_until_ready(logits)
+        t = (time.time() - t0) / 8
+        print(f"  {arch:18s} decode_step: {t*1e3:6.1f} ms")
+        emit(f"lm_step/decode/{arch}", t * 1e6, "reduced;b4")

@@ -1,0 +1,26 @@
+"""Paper Fig 12: gamma1 x gamma2 radius-percentile grid -> QPS@recall."""
+from __future__ import annotations
+
+from benchmarks.common import N_SHARDS, BenchContext, emit
+from repro.core.search import SearchConfig, search_pag
+from repro.data.vectors import recall_at_k
+
+
+def main(ctx: BenchContext):
+    print("\n== Fig 12 analogue: radius percentiles (gamma1 x gamma2) ==")
+    ds = ctx.dataset("clustered")
+    for g1 in (0.5, 0.75, 1.0):
+        for g2 in (0.5, 0.9):
+            pag, _ = ctx.pag("clustered", p=0.2, lam=3.0, redundancy=4,
+                             gamma1=g1, gamma2=g2)
+            store = ctx.pag_store("clustered", "ssd", pag, seed=3)
+            cfg = SearchConfig(L=64, k=10, n_probe_max=48)
+            ids, _, st = search_pag(pag, ds.d, ds.queries, store, cfg,
+                                    n_shards=N_SHARDS)
+            rec = recall_at_k(ids, ds.gt_ids, 10)
+            print(f"  g1={g1:.2f} g2={g2:.2f}: recall={rec:.3f} "
+                  f"qps={st.qps():7.0f} parts={pag.n_parts} "
+                  f"promoted={pag.build_stats['n_promoted']}")
+            emit(f"radius_grid/g1={g1}/g2={g2}",
+                 1e6 / max(st.qps(), 1e-9),
+                 f"recall={rec:.3f};qps={st.qps():.0f}")

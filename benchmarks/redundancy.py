@@ -1,0 +1,23 @@
+"""Paper Fig 11: effect of the GR redundancy number on QPS@recall."""
+from __future__ import annotations
+
+from benchmarks.common import N_SHARDS, BenchContext, emit
+from repro.core.search import SearchConfig, search_pag
+from repro.data.vectors import recall_at_k
+
+
+def main(ctx: BenchContext):
+    print("\n== Fig 11 analogue: redundancy number ==")
+    ds = ctx.dataset("clustered")
+    for redundancy in (1, 2, 4, 8):
+        pag, _ = ctx.pag("clustered", p=0.2, lam=3.0,
+                         redundancy=redundancy)
+        store = ctx.pag_store("clustered", "ssd", pag, seed=2)
+        cfg = SearchConfig(L=64, k=10, n_probe_max=48, mode="async")
+        ids, _, st = search_pag(pag, ds.d, ds.queries, store, cfg,
+                                n_shards=N_SHARDS)
+        rec = recall_at_k(ids, ds.gt_ids, 10)
+        print(f"  r={redundancy:2d}: recall={rec:.3f} qps={st.qps():7.0f} "
+              f"parts={pag.n_parts}")
+        emit(f"redundancy/r{redundancy}", 1e6 / max(st.qps(), 1e-9),
+             f"recall={rec:.3f};qps={st.qps():.0f}")

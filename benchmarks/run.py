@@ -1,0 +1,56 @@
+"""Benchmark harness: one module per paper table/figure + roofline reader.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus human-readable tables).
+``--fast`` shrinks the dataset for smoke runs; the default matches the
+numbers quoted in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default="",
+                    help="comma list: build_time,qps_recall,redundancy,"
+                         "radius_grid,drs_tail,kernels,lm,roofline")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        build_time,
+        cache_effect,
+        drs_tail,
+        kernels_micro,
+        lm_step,
+        qps_recall,
+        radius_grid,
+        redundancy,
+        roofline,
+    )
+    from benchmarks.common import BenchContext
+
+    ctx = BenchContext(n=6000 if args.fast else 12000,
+                       n_queries=100 if args.fast else 200)
+    modules = {
+        "build_time": build_time.main,
+        "qps_recall": qps_recall.main,
+        "redundancy": redundancy.main,
+        "radius_grid": radius_grid.main,
+        "drs_tail": drs_tail.main,
+        "cache_effect": cache_effect.main,
+        "kernels": kernels_micro.main,
+        "lm": lm_step.main,
+        "roofline": roofline.main,
+    }
+    selected = args.only.split(",") if args.only else list(modules)
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name in selected:
+        modules[name](ctx)
+    print(f"\ntotal benchmark time: {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

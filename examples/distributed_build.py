@@ -1,0 +1,53 @@
+"""Concurrent Index Construction (paper §IV-D) demo: build per-partition
+graphs independently (the multi-machine stage), merge with the η-rule,
+then checkpoint the index and serve it with a shard failure + recovery.
+
+    PYTHONPATH=src python examples/distributed_build.py
+"""
+import numpy as np
+
+from repro.core.cic import cic_build
+from repro.core.distributed import ShardedServing
+from repro.core.index import load_index, save_index
+from repro.core.pag import build_pag
+from repro.core.search import SearchConfig, write_partitions
+from repro.data.vectors import make_dataset, recall_at_k
+from repro.storage.simulator import ObjectStore, StorageConfig
+
+
+def main():
+    ds = make_dataset("clustered", n=12000, d=32, n_queries=100, k_gt=10)
+
+    print("1) CIC: 4 'machines' build sub-graphs, then η-limited merge")
+    stats = {}
+    cic_build(ds.base, c=4, stats=stats)
+    print(f"   sequential total: {stats['total_s']}s | parallel-equivalent"
+          f" (4 machines): {stats['parallel_total_s']}s "
+          f"(per-machine build {stats['per_part_build_s']}s)")
+
+    print("2) full PAG build + checkpoint + restore")
+    pag = build_pag(ds.base, p=0.2, lam=3.0, redundancy=4)
+    path = save_index("artifacts/example_index", pag)
+    print(f"   saved index -> {path}")
+    pag = load_index("artifacts/example_index")
+
+    print("3) sharded serving with failure injection")
+    store = ObjectStore(StorageConfig.preset("dfs"))
+    write_partitions(pag, ds.base, store, n_shards=4)
+    srv = ShardedServing(pag=pag, store=store, n_shards=4, dim=ds.d)
+    cfg = SearchConfig(L=64, k=10, n_probe_max=48, mode="async",
+                       hedge_after_s=3e-3)  # straggler hedging on
+    ids, _, st = srv.search(ds.queries, cfg)
+    print(f"   healthy: recall={recall_at_k(ids, ds.gt_ids, 10):.3f} "
+          f"QPS={st.qps():.0f} p99={st.p99()*1e3:.2f}ms")
+    srv.kill_shard(2)
+    ids, _, st = srv.search(ds.queries, cfg)
+    print(f"   shard 2 down: recall={recall_at_k(ids, ds.gt_ids, 10):.3f} "
+          f"(graceful degradation; GR redundancy absorbs part of the loss)")
+    srv.revive()
+    ids, _, st = srv.search(ds.queries, cfg)
+    print(f"   recovered: recall={recall_at_k(ids, ds.gt_ids, 10):.3f}")
+
+
+if __name__ == "__main__":
+    main()

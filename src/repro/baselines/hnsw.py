@@ -1,0 +1,87 @@
+"""HNSW-lite baseline (Malkov & Yashunin) — the paper's in-memory
+comparison (Fig 9). Hierarchy of geometric-sized levels, each a Vamana-
+built PG over its subset; search descends greedily, beam at level 0.
+All in memory; latency = compute model only (and real wall-clock in the
+memory benchmark).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.build import PG, build_pg
+from repro.core.graph_search import greedy_search
+from repro.storage.simulator import ComputeModel
+
+
+@dataclasses.dataclass
+class HNSWIndex:
+    levels: List[PG]            # level 0 = full set
+    level_ids: List[np.ndarray]  # subset original ids per level
+    n: int
+    d: int
+    build_stats: dict
+
+
+def build_hnsw(x: np.ndarray, R: int = 16, L: int = 48,
+               level_ratio: float = 0.1, min_level: int = 256,
+               seed: int = 0) -> HNSWIndex:
+    t0 = time.time()
+    n, d = x.shape
+    rng = np.random.default_rng(seed)
+    levels, level_ids = [], []
+    ids = np.arange(n)
+    while True:
+        pg = build_pg(x[ids], R=R, L=L, seed=seed)
+        levels.append(pg)
+        level_ids.append(ids)
+        if len(ids) <= min_level:
+            break
+        ids = np.sort(rng.choice(ids, size=max(int(len(ids) * level_ratio),
+                                               min_level), replace=False))
+    stats = {"n": n, "d": d, "n_levels": len(levels),
+             "total_s": round(time.time() - t0, 2)}
+    return HNSWIndex(levels=levels, level_ids=level_ids, n=n, d=d,
+                     build_stats=stats)
+
+
+def search_hnsw(idx: HNSWIndex, queries: np.ndarray, k: int = 10,
+                L: int = 32, compute: Optional[ComputeModel] = None
+                ) -> Tuple[np.ndarray, np.ndarray, list]:
+    compute = compute or ComputeModel()
+    qn = queries.shape[0]
+    # descend: greedy (L=2) from top level down, carrying the entry point
+    entry = np.full(qn, idx.levels[-1].entry, np.int64)
+    total_hops = np.zeros(qn)
+    width = idx.levels[0].nbrs.shape[1]
+    for lvl in range(len(idx.levels) - 1, 0, -1):
+        pg = idx.levels[lvl]
+        A_dev, nbrs_dev, n_nodes, _ = pg.device_arrays()
+        res = greedy_search(A_dev, nbrs_dev, n_nodes,
+                            jnp.asarray(entry, jnp.int32),
+                            jnp.asarray(queries), L=2, K=1)
+        best = np.asarray(res.ids)[:, 0]
+        total_hops += np.asarray(res.n_hops)
+        orig = idx.level_ids[lvl][np.minimum(best, pg.n_nodes - 1)]
+        # map to next level's row (level ids are sorted; next level is a
+        # superset of this level's subset)
+        nxt = idx.level_ids[lvl - 1]
+        entry = np.searchsorted(nxt, orig)
+
+    pg0 = idx.levels[0]
+    A_dev, nbrs_dev, n_nodes, _ = pg0.device_arrays()
+    res = greedy_search(A_dev, nbrs_dev, n_nodes,
+                        jnp.asarray(entry, jnp.int32),
+                        jnp.asarray(queries), L=L, K=k)
+    out_ids = np.asarray(res.ids)[:, :k].astype(np.int64)
+    out_d2 = np.asarray(res.dists)[:, :k]
+    hops0 = np.asarray(res.n_hops)
+
+    lats = [compute.search_hop(float(total_hops[qi] + hops0[qi]) * width,
+                               idx.d) for qi in range(qn)]
+    out_ids = np.where(out_ids < pg0.n_nodes, out_ids, -1)
+    return out_ids, out_d2, lats

@@ -1,0 +1,68 @@
+"""Product Quantization (Jégou et al., TPAMI'11) — the DiskANN baseline's
+in-memory compressed representation, and the target of the Pallas
+`pq_adc` kernel (ref in kernels/pq_adc/ref.py mirrors `adc_distances`).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.clustering import kmeans
+
+
+@dataclasses.dataclass
+class PQCodebook:
+    centroids: np.ndarray   # [M, 256, d_sub]
+    M: int
+    d: int
+
+    @property
+    def d_sub(self) -> int:
+        return self.d // self.M
+
+
+def train_pq(x: np.ndarray, M: int = 8, n_train: int = 4096,
+             seed: int = 0) -> PQCodebook:
+    n, d = x.shape
+    assert d % M == 0
+    d_sub = d // M
+    rng = np.random.default_rng(seed)
+    sample = x[rng.choice(n, size=min(n_train, n), replace=False)]
+    cents = np.zeros((M, 256, d_sub), np.float32)
+    for m in range(M):
+        sub = sample[:, m * d_sub:(m + 1) * d_sub]
+        k = min(256, len(sub))
+        c, _ = kmeans(sub, k, iters=6, seed=seed + m)
+        cents[m, :k] = c
+        if k < 256:
+            cents[m, k:] = c[0]
+    return PQCodebook(cents, M, d)
+
+
+def encode_pq(cb: PQCodebook, x: np.ndarray, chunk: int = 8192
+              ) -> np.ndarray:
+    """x [n, d] -> codes [n, M] uint8."""
+    n = x.shape[0]
+    codes = np.zeros((n, cb.M), np.uint8)
+    for s in range(0, n, chunk):
+        xb = x[s:s + chunk]
+        for m in range(cb.M):
+            sub = xb[:, m * cb.d_sub:(m + 1) * cb.d_sub]
+            d2 = ((sub[:, None, :] - cb.centroids[m][None]) ** 2).sum(-1)
+            codes[s:s + chunk, m] = d2.argmin(axis=1)
+    return codes
+
+
+def adc_lut(cb: PQCodebook, q: np.ndarray) -> np.ndarray:
+    """Asymmetric-distance lookup table for one query: [M, 256]."""
+    lut = np.zeros((cb.M, 256), np.float32)
+    for m in range(cb.M):
+        sub = q[m * cb.d_sub:(m + 1) * cb.d_sub]
+        lut[m] = ((cb.centroids[m] - sub[None]) ** 2).sum(-1)
+    return lut
+
+
+def adc_distances(lut: np.ndarray, codes: np.ndarray) -> np.ndarray:
+    """Approximate sq-distances via LUT gather: codes [n, M] -> [n]."""
+    return lut[np.arange(lut.shape[0])[None, :], codes].sum(axis=1)

@@ -1,0 +1,109 @@
+"""Sharded npz checkpoints with msgpack manifests.
+
+Layout: <dir>/step_<N>/ {manifest.msgpack, arrays.npz}. Writes go to a
+temp dir and are atomically renamed — a crash mid-save never corrupts the
+latest complete checkpoint (fault-tolerance deliverable; restart tests in
+tests/test_checkpoint.py). Works for both model params/opt state and the
+ANNS index pytrees (same tree-of-arrays representation).
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        arr = np.asarray(leaf)
+        flat[key] = arr
+    return flat
+
+
+def _tree_structure(tree):
+    return jax.tree_util.tree_structure(tree)
+
+
+def save_checkpoint(directory: str, step: int, tree: Any,
+                    extra: Optional[Dict[str, Any]] = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten(tree)
+    # bf16 has no numpy dtype: store as uint16 view + dtype tag
+    arrays, dtypes = {}, {}
+    for k, v in flat.items():
+        if v.dtype == jnp.bfloat16:
+            arrays[k] = v.view(np.uint16)
+            dtypes[k] = "bfloat16"
+        else:
+            arrays[k] = v
+            dtypes[k] = str(v.dtype)
+    manifest = {
+        "step": int(step),
+        "keys": list(arrays.keys()),
+        "dtypes": dtypes,
+        "extra": extra or {},
+    }
+    tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_ckpt_")
+    try:
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
+            f.write(msgpack.packb(manifest))
+        final = os.path.join(directory, f"step_{step:08d}")
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except Exception:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_")]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(directory: str, step: Optional[int] = None,
+                    like: Any = None) -> Tuple[int, Any, Dict[str, Any]]:
+    """Returns (step, tree, extra). ``like`` supplies the tree structure;
+    without it a flat {path: array} dict is returned."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        flat = {}
+        for k in manifest["keys"]:
+            arr = z[k]
+            if manifest["dtypes"][k] == "bfloat16":
+                arr = arr.view(jnp.bfloat16)
+            flat[k] = arr
+    if like is None:
+        return manifest["step"], flat, manifest["extra"]
+    ref = _flatten(like)
+    assert set(ref) == set(flat), (
+        f"checkpoint/tree mismatch: {set(ref) ^ set(flat)}")
+    leaves_ref, treedef = jax.tree_util.tree_flatten_with_path(like)
+    ordered = []
+    for p, _ in leaves_ref:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in p)
+        ordered.append(jnp.asarray(flat[key]))
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), ordered)
+    return manifest["step"], tree, manifest["extra"]

@@ -1,0 +1,65 @@
+"""K-means (kmeans++ init) with optional SPANN-style balance penalty.
+
+Used by the SPANN baseline (hierarchical balanced clustering stand-in) and
+by CIC's locality partitioning. Lloyd iterations run as jitted batched
+distance computations.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.distances import cdist2
+
+
+def kmeanspp_init(x: np.ndarray, k: int, rng) -> np.ndarray:
+    n = x.shape[0]
+    centers = [x[rng.integers(n)]]
+    d2 = np.asarray(cdist2(jnp.asarray(x), jnp.asarray(
+        np.asarray(centers[-1])[None])))[:, 0]
+    for _ in range(1, k):
+        probs = d2 / max(d2.sum(), 1e-12)
+        centers.append(x[rng.choice(n, p=probs)])
+        nd = np.asarray(cdist2(jnp.asarray(x), jnp.asarray(
+            np.asarray(centers[-1])[None])))[:, 0]
+        d2 = np.minimum(d2, nd)
+    return np.stack(centers)
+
+
+def kmeans(x: np.ndarray, k: int, iters: int = 10, seed: int = 0,
+           balance_weight: float = 0.0
+           ) -> Tuple[np.ndarray, np.ndarray]:
+    """Returns (centers [k, d], assignment [n]).
+
+    balance_weight > 0 adds a running-size penalty to the assignment
+    distance (Liu et al. flexible-balance trick SPANN builds on): cost =
+    δ(x, c_j) + w * mean_d2 * count_j / (n/k).
+    """
+    n = x.shape[0]
+    rng = np.random.default_rng(seed)
+    centers = kmeanspp_init(x, k, rng)
+    assign = np.zeros(n, np.int64)
+    target = n / k
+    for _ in range(iters):
+        d2 = np.asarray(cdist2(jnp.asarray(x), jnp.asarray(centers)))
+        if balance_weight > 0:
+            scale = balance_weight * float(d2.mean())
+            counts = np.zeros(k, np.float64)
+            order = rng.permutation(n)
+            for s in range(0, n, 256):  # chunked greedy balance
+                idx = order[s:s + 256]
+                cost = d2[idx] + scale * counts[None, :] / target
+                a = cost.argmin(axis=1)
+                assign[idx] = a
+                np.add.at(counts, a, 1)
+        else:
+            assign = d2.argmin(axis=1)
+        for j in range(k):
+            sel = assign == j
+            if sel.any():
+                centers[j] = x[sel].mean(axis=0)
+            else:  # re-seed empty cluster at the worst-served point
+                centers[j] = x[int(d2.min(axis=1).argmax())]
+    return centers.astype(np.float32), assign.astype(np.int64)

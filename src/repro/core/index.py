@@ -1,0 +1,32 @@
+"""Index persistence + the disaggregated-serving view of a PAG.
+
+The in-memory half (agg points, PG, radii, partition map) checkpoints via
+the shared checkpoint module (atomic-rename crash safety); residual
+partitions live in the ObjectStore. A restarted serving node needs only
+the checkpoint — no residual reload — which is the paper's failover
+argument (§I: shared storage removes index-copy reload from recovery).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.core.pag import PAG
+
+
+def save_index(directory: str, pag: PAG, step: int = 0,
+               extra: Optional[Dict] = None) -> str:
+    payload = {k: np.asarray(v) for k, v in pag.arrays().items()}
+    return save_checkpoint(directory, step, payload,
+                           extra={"build_stats": pag.build_stats,
+                                  **(extra or {})})
+
+
+def load_index(directory: str, step: Optional[int] = None) -> PAG:
+    _, flat, extra = load_checkpoint(directory, step)
+    pag = PAG.from_arrays(flat)
+    pag.build_stats = extra.get("build_stats", {})
+    return pag

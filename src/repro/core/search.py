@@ -1,0 +1,181 @@
+"""Search on the PAG index (paper §V): graph traversal + Adaptive
+Partition Probe early stop (§V-A) + asynchronous partition fetch (Alg 5).
+
+Execution = real computation (exact recall); time = storage-simulator
+event clock (see DESIGN.md §8). The traversal itself is the batched jitted
+Algorithm 1; the APP replay and the async I/O timeline are per-query numpy
+over its recorded expansion order.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph_search import greedy_search
+from repro.core.pag import PAG
+from repro.storage.simulator import (
+    ComputeModel,
+    ObjectStore,
+    QueryTimeline,
+    StorageConfig,
+)
+
+INF = np.float32(3.4e38)
+
+
+def write_partitions(pag: PAG, x: np.ndarray, store: ObjectStore,
+                     prefix: str = "part", n_shards: int = 1):
+    """Materialize per-partition residual objects in the storage layer.
+
+    Object = float32 [cnt, 1 + d]: column 0 carries the original id (as a
+    bit-cast int), columns 1: the vector. Partitions are round-robined
+    over ``n_shards`` logical shards (prefix/<shard>/<pid>) so failure
+    injection can kill a shard (fault-tolerance tests)."""
+    for pid in range(pag.n_parts):
+        cnt = int(pag.pcount[pid])
+        ids = pag.plist[pid, :cnt]
+        obj = np.zeros((cnt, x.shape[1] + 1), np.float32)
+        obj[:, 0] = ids.astype(np.float32)  # exact for ids < 2^24
+        obj[:, 1:] = x[ids]
+        shard = pid % n_shards
+        store.put(f"{prefix}/{shard}/{pid}", obj)
+
+
+@dataclasses.dataclass
+class SearchConfig:
+    L: int = 32                 # traversal beam width
+    k: int = 10                 # results
+    rho: float = 1.25           # APP scale factor (paper's ρ)
+    n_probe_max: int = 16       # cap on fetched partitions
+    mode: str = "async"         # async | sync (Alg 5 vs blocking)
+    hedge_after_s: Optional[float] = None  # straggler mitigation
+    cache: Optional[object] = None  # PartitionCache (beyond-paper, §V-B)
+
+
+@dataclasses.dataclass
+class SearchStats:
+    latencies_s: List[float]
+    n_probes: List[int]
+    n_hops: List[int]
+
+    def qps(self) -> float:
+        lat = np.asarray(self.latencies_s)
+        return float(1.0 / np.maximum(lat.mean(), 1e-12))
+
+    def p999(self) -> float:
+        return float(np.quantile(np.asarray(self.latencies_s), 0.999))
+
+    def p99(self) -> float:
+        return float(np.quantile(np.asarray(self.latencies_s), 0.99))
+
+
+def _app_probe_order(path: np.ndarray, path_d2: np.ndarray, hops: int,
+                     radius: np.ndarray, rho: float, n_probe_max: int
+                     ) -> List[int]:
+    """APP (§V-A): walk the expansion order; keep partitions whose sphere
+    can overlap the current best ball; stop when the current node's
+    distance exceeds rho * (d_min + r_best + r_cur) (true distances)."""
+    probes: List[int] = []
+    d_min = np.inf
+    r_best = 0.0
+    for t in range(hops):
+        node = int(path[t])
+        d_cur = float(np.sqrt(max(path_d2[t], 0.0)))
+        r_cur = float(radius[node])
+        if d_cur > rho * (d_min + r_best + r_cur) and probes:
+            break  # early stop (paper Fig 7 rule, scaled by rho)
+        if d_cur < d_min:
+            d_min, r_best = d_cur, r_cur
+        probes.append(node)
+        if len(probes) >= n_probe_max:
+            break
+    return probes
+
+
+def search_pag(pag: PAG, x_dim: int, queries: np.ndarray,
+               store: ObjectStore, cfg: SearchConfig,
+               compute: Optional[ComputeModel] = None,
+               prefix: str = "part", n_shards: int = 1,
+               dead_shard_fallback: bool = True
+               ) -> Tuple[np.ndarray, np.ndarray, SearchStats]:
+    """Returns (result ids [Q, k] original ids, sq-dists [Q, k], stats)."""
+    compute = compute or ComputeModel()
+    pg = pag.pg
+    A_dev, nbrs_dev, n_nodes, entry = pg.device_arrays()
+    res = greedy_search(A_dev, nbrs_dev, n_nodes, entry,
+                        jnp.asarray(queries), L=cfg.L, K=cfg.L)
+    path_all = np.asarray(res.path)
+    path_all_d2 = np.asarray(res.path_dists)
+    hops = np.asarray(res.n_hops)
+    beam_ids = np.asarray(res.ids)
+    beam_d2 = np.asarray(res.dists)
+
+    q_count = queries.shape[0]
+    out_ids = np.full((q_count, cfg.k), -1, np.int64)
+    out_d2 = np.full((q_count, cfg.k), INF, np.float32)
+    stats = SearchStats([], [], [])
+
+    R_edges = pg.nbrs.shape[1]
+    for qi in range(q_count):
+        tl = QueryTimeline()
+        h = int(hops[qi])
+        tl.add_compute(compute.search_hop(h * R_edges, x_dim))
+
+        probes = _app_probe_order(path_all[qi], path_all_d2[qi], h,
+                                  pag.radius, cfg.rho, cfg.n_probe_max)
+        # candidate pool: aggregation points themselves (they are dataset
+        # points) + residuals of probed partitions
+        cand_ids = [pag.node_src[beam_ids[qi]].astype(np.int64)]
+        cand_d2 = [beam_d2[qi].astype(np.float32)]
+        n_fetched = 0
+        for pid in probes:
+            cnt = int(pag.pcount[pid])
+            if cnt == 0:
+                continue
+            key = f"{prefix}/{pid % n_shards}/{pid}"
+            cached = cfg.cache.get(key) if cfg.cache is not None else None
+            if cached is not None:
+                obj, lat = cached, 0.0  # local-memory hit
+            else:
+                try:
+                    if cfg.hedge_after_s is not None:
+                        obj, lat = store.get_hedged(key, cfg.hedge_after_s)
+                    else:
+                        obj, lat = store.get(key)
+                except KeyError:
+                    if dead_shard_fallback:
+                        continue  # degraded: skip dead shard's partition
+                    raise
+                if cfg.cache is not None:
+                    cfg.cache.put(key, obj)
+            n_fetched += 1
+            scan_cost = compute.scan(cnt, x_dim)
+            tl.issue_io(lat, scan_cost)
+            vecs = obj[:, 1:]
+            ids = obj[:, 0].astype(np.int64)
+            diff = vecs - queries[qi][None, :]
+            d2 = np.einsum("nd,nd->n", diff, diff)
+            cand_ids.append(ids)
+            cand_d2.append(d2.astype(np.float32))
+
+        ids = np.concatenate(cand_ids)
+        d2 = np.concatenate(cand_d2)
+        ids = np.where(ids >= 0, ids, 2**62)
+        # dedup by id keeping min distance (redundant copies; Def 5)
+        order = np.lexsort((d2, ids))
+        ids, d2 = ids[order], d2[order]
+        first = np.r_[True, ids[1:] != ids[:-1]]
+        ids, d2 = ids[first], d2[first]
+        top = np.argsort(d2)[: cfg.k]
+        out_ids[qi, : len(top)] = np.where(ids[top] < 2**62, ids[top], -1)
+        out_d2[qi, : len(top)] = d2[top]
+
+        lat = tl.finish_async() if cfg.mode == "async" else tl.finish_sync()
+        stats.latencies_s.append(lat)
+        stats.n_probes.append(n_fetched)
+        stats.n_hops.append(h)
+
+    return out_ids, out_d2, stats

@@ -1,0 +1,73 @@
+"""Ambient mesh context so model code can pick distribution-aware paths
+(e.g. shard_map expert parallelism) without threading mesh through every
+signature. Launch code sets it; tests/CPU paths leave it unset.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional, Tuple
+
+from jax.sharding import Mesh
+
+from repro.distributed.sharding import DistConfig
+
+_STATE: dict = {"mesh": None, "dist": None}
+
+
+def set_mesh(mesh: Optional[Mesh], dist: Optional[DistConfig] = None):
+    _STATE["mesh"] = mesh
+    _STATE["dist"] = dist or (DistConfig() if mesh is not None else None)
+
+
+def get_mesh() -> Tuple[Optional[Mesh], Optional[DistConfig]]:
+    return _STATE["mesh"], _STATE["dist"]
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh, dist: Optional[DistConfig] = None):
+    prev = (_STATE["mesh"], _STATE["dist"])
+    set_mesh(mesh, dist)
+    try:
+        yield
+    finally:
+        _STATE["mesh"], _STATE["dist"] = prev
+
+
+# --------------------- activation constraint helpers ----------------------
+# (no-ops when no ambient mesh: tests / pure-CPU paths are unaffected)
+
+def constrain_tokens(x):
+    """[B, S, D] (or [B, S]) activations -> batch over data axes."""
+    from repro.distributed import sharding as shd
+
+    mesh, _ = get_mesh()
+    if mesh is None:
+        return x
+    spec = shd.token_act_spec(mesh, x.shape[0])
+    entries = list(spec)[: x.ndim]
+    entries += [None] * (x.ndim - len(entries))
+    from jax.sharding import PartitionSpec as P
+    return shd.constrain(x, mesh, P(*entries))
+
+
+def constrain_heads(x):
+    """[B, S, H, hd] -> batch over data, heads (or head_dim) over model."""
+    from repro.distributed import sharding as shd
+
+    mesh, dist = get_mesh()
+    if mesh is None:
+        return x
+    return shd.constrain(
+        x, mesh, shd.head_act_spec(mesh, x.shape[0], x.shape[2],
+                                   x.shape[3], dist))
+
+
+def constrain_ff(x):
+    """[B, S, F] MLP hidden -> F over model."""
+    from repro.distributed import sharding as shd
+
+    mesh, _ = get_mesh()
+    if mesh is None:
+        return x
+    return shd.constrain(
+        x, mesh, shd.ff_act_spec(mesh, x.shape[0], x.shape[-1]))

@@ -1,0 +1,290 @@
+"""Logical->physical sharding rules with divisibility fallback.
+
+Every parameter leaf is matched by its *name* to a per-dimension list of
+candidate logical axes; each candidate resolves to mesh axes ("data" may
+expand to ("pod", "data") for FSDP-over-pods). A candidate is accepted only
+if the dim divides the axis-group size and no mesh axis is reused within
+the spec — otherwise the next candidate (or replication) applies. This
+cleanly absorbs qwen's 20 heads, hymba's 25/5 heads, whisper's 12 heads and
+all kv_heads < 16 (see DESIGN.md §5).
+
+Convention: stacked layer params carry a leading L dim -> always unsharded.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class DistConfig:
+    """How logical axes map onto the mesh."""
+    data: Tuple[str, ...] = ("data",)
+    model: Tuple[str, ...] = ("model",)
+    fsdp_over_pod: bool = False  # fold "pod" into the FSDP (data) axes
+    # When n_heads % model_axis != 0, sharding head_dim instead forces an
+    # activation all-reduce per attention einsum (measured 3.4 TB/dev/step
+    # on qwen1.5-4b train — EXPERIMENTS.md §Perf). Default False:
+    # replicate attention over the model axis instead (MLP stays TP).
+    shard_head_dim_fallback: bool = False
+
+    def logical(self, name: str, mesh: Mesh) -> Tuple[str, ...]:
+        axes = {"data": self.data, "model": self.model}[name]
+        if name == "data" and self.fsdp_over_pod and "pod" in mesh.axis_names:
+            axes = ("pod",) + tuple(a for a in axes if a != "pod")
+        return tuple(a for a in axes if a in mesh.axis_names)
+
+
+# per-leaf-name rules: tuple over trailing dims; each entry is a priority
+# list of logical axis names (() = replicate).
+_RULES: Dict[str, Tuple[Sequence[str], ...]] = {
+    # embeddings
+    "tok_embed": (("model",), ("data",)),
+    "lm_head": (("data",), ("model",)),
+    "meta_tokens": ((), ()),
+    # attention
+    "wq": (("data",), ("model",), ("model",)),
+    "wk": (("data",), ("model",), ("model",)),
+    "wv": (("data",), ("model",), ("model",)),
+    "wo": (("model",), ("model",), ("data",)),
+    "bq": (("model",), ("model",)),
+    "bk": (("model",), ("model",)),
+    "bv": (("model",), ("model",)),
+    # dense mlp
+    "w_gate": (("data",), ("model",)),
+    "w_up": (("data",), ("model",)),
+    "w_down": (("model",), ("data",)),
+    "w_fc": (("data",), ("model",)),
+    "b_fc": (("model",),),
+    "w_out": (("model",), ("data",)),
+    "b_out": ((),),
+    # moe (leading expert dim); router replicated (tiny, read per token)
+    "router": ((), ()),
+    "moe/w_gate": (("model",), ("data",), ()),
+    "moe/w_up": (("model",), ("data",), ()),
+    "moe/w_down": (("model",), (), ("data",)),
+    "shared_gate": (("data",), ("model",)),
+    "shared_up": (("data",), ("model",)),
+    "shared_down": (("model",), ("data",)),
+    # ssm
+    "in_proj": (("data",), ("model",)),
+    "out_proj": (("model",), ("data",)),
+    "conv_w": ((), ("model",)),
+    "conv_b": (("model",),),
+    "A_log": ((),),
+    "D": ((),),
+    "dt_bias": ((),),
+    "ssm_norm": (("model",),),
+}
+
+
+def _leaf_rule(path: Tuple[str, ...]) -> Optional[Tuple[Sequence[str], ...]]:
+    name = path[-1]
+    if name in ("row", "col") and len(path) >= 2:
+        # factored optimizer stats: derive from the parent param's rule by
+        # dropping the reduced dim (row: last; col: second-to-last)
+        parent = _leaf_rule(path[:-1])
+        if parent is None:
+            return None
+        if name == "row":
+            return parent[:-1]
+        return parent[:-2] + parent[-1:]
+    if len(path) >= 2 and path[-2] == "moe" and f"moe/{name}" in _RULES:
+        return _RULES[f"moe/{name}"]
+    return _RULES.get(name)
+
+
+def _path_names(key_path) -> Tuple[str, ...]:
+    names = []
+    for k in key_path:
+        if hasattr(k, "key"):
+            names.append(str(k.key))
+        elif hasattr(k, "idx"):
+            names.append(str(k.idx))
+        else:
+            names.append(str(k))
+    return tuple(names)
+
+
+# attention leaves: (heads-dim position within the rule, hd-dim position)
+_ATTN_HD_DIMS = {"wq": (1, 2), "wk": (1, 2), "wv": (1, 2), "wo": (0, 1),
+                 "bq": (0, 1), "bk": (0, 1), "bv": (0, 1)}
+
+
+def spec_for_leaf(path: Tuple[str, ...], shape: Tuple[int, ...],
+                  mesh: Mesh, dist: DistConfig,
+                  stacked: bool) -> P:
+    rule = _leaf_rule(path)
+    ndim = len(shape)
+    offset = 1 if stacked and ndim >= 1 else 0
+    entries = [None] * ndim
+    if rule is None:
+        return P(*entries)
+    if not dist.shard_head_dim_fallback and path[-1] in _ATTN_HD_DIMS:
+        h_dim, hd_dim = _ATTN_HD_DIMS[path[-1]]
+        if hd_dim < len(rule):
+            rule = tuple(() if i == hd_dim else c
+                         for i, c in enumerate(rule))
+    used: set = set()
+    for i, candidates in enumerate(rule):
+        dim = i + offset
+        if dim >= ndim:
+            break
+        size = shape[dim]
+        for logical in candidates:
+            axes = dist.logical(logical, mesh)
+            if not axes or any(a in used for a in axes):
+                continue
+            group = 1
+            for a in axes:
+                group *= mesh.shape[a]
+            if group > 1 and size % group == 0:
+                entries[dim] = axes if len(axes) > 1 else axes[0]
+                used.update(axes)
+                break
+    return P(*entries)
+
+
+_STACKED_GROUPS = ("blocks", "dense_blocks", "encoder")
+
+
+def param_specs(params, mesh: Mesh,
+                dist: Optional[DistConfig] = None):
+    """PartitionSpec pytree matching a params (or abstract params) pytree."""
+    dist = dist or DistConfig()
+
+    def one(key_path, leaf):
+        path = _path_names(key_path)
+        stacked = any(g in path for g in _STACKED_GROUPS)
+        return spec_for_leaf(path, tuple(leaf.shape), mesh, dist, stacked)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def param_shardings(params, mesh: Mesh, dist: Optional[DistConfig] = None):
+    specs = param_specs(params, mesh, dist)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ------------------------------ activations -------------------------------
+
+def batch_spec(batch_size: int, mesh: Mesh, dist: Optional[DistConfig] = None,
+               extra_dims: int = 1) -> P:
+    """Spec for [B, ...] token-level inputs: shard B over (pod,data) when
+    divisible; otherwise leave replicated (e.g. long_500k's batch=1)."""
+    dist = dist or DistConfig()
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    group = 1
+    for a in axes:
+        group *= mesh.shape[a]
+    lead = axes if (group > 1 and batch_size % group == 0) else None
+    if lead is not None and len(lead) == 1:
+        lead = lead[0]
+    return P(lead, *([None] * extra_dims))
+
+
+def cache_spec(cfg, batch_size: int, mesh: Mesh,
+               dist: Optional[DistConfig] = None,
+               seq_len: Optional[int] = None) -> Dict[str, P]:
+    """Specs for the decode cache: [L, B, S, KVH, hd] k/v (+ssm h/conv).
+
+    Batch shards over (pod,data) when divisible, else the sequence dim
+    does (long-context, batch=1). kv-head dim shards over model when
+    divisible; otherwise the SEQUENCE dim also takes the model axis —
+    attention over a seq-sharded cache costs a small psum of partial
+    outputs, vs. the per-layer activation all-gathers head_dim sharding
+    causes (measured 96 GB/step on internvl2 decode; EXPERIMENTS.md §Perf).
+    """
+    dist = dist or DistConfig()
+    daxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dgroup = 1
+    for a in daxes:
+        dgroup *= mesh.shape[a]
+    b_ax = daxes if (dgroup > 1 and batch_size % dgroup == 0) else None
+    s_axes = [] if b_ax is not None else list(daxes if dgroup > 1 else ())
+
+    m = mesh.shape.get("model", 1)
+    kvh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    kv_ax = hd_ax = None
+    if m > 1 and kvh and kvh % m == 0:
+        kv_ax = "model"
+    elif m > 1 and dist.shard_head_dim_fallback and hd and hd % m == 0:
+        hd_ax = "model"
+    elif m > 1:
+        s_axes.append("model")
+    def _group(axes):
+        g = 1
+        for a in axes:
+            g *= mesh.shape[a]
+        return g
+
+    if seq_len is not None:
+        while s_axes and seq_len % _group(s_axes) != 0:
+            s_axes = s_axes[:-1]  # drop minor axes until it divides
+
+    def flat(ax):
+        if not ax:
+            return None
+        ax = tuple(ax)
+        return ax[0] if len(ax) == 1 else ax
+
+    specs: Dict[str, P] = {}
+    kv = P(None, flat(b_ax), flat(s_axes), kv_ax, hd_ax)
+    for key in ("k", "v", "xk", "xv"):
+        specs[key] = kv
+    # ssm state [L, B, H, P, N]; conv [L, B, K-1, C]
+    nh = cfg.ssm_heads if cfg.ssm_state else 0
+    h_ax = "model" if (m > 1 and nh and nh % m == 0) else None
+    specs["h"] = P(None, flat(b_ax), h_ax, None, None)
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_state if cfg.ssm_state else 0
+    c_ax = "model" if (m > 1 and conv_dim and conv_dim % m == 0) else None
+    specs["conv"] = P(None, flat(b_ax), None, c_ax)
+    return specs
+
+
+def constrain(x, mesh: Mesh, spec: P):
+    """with_sharding_constraint that is a no-op on trivial meshes."""
+    if all(mesh.shape[a] == 1 for a in mesh.axis_names):
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _dp_entry(mesh: Mesh, batch: int):
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    group = 1
+    for a in axes:
+        group *= mesh.shape[a]
+    if group <= 1 or batch % group != 0:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def token_act_spec(mesh: Mesh, batch: int) -> P:
+    """[B, S, D] activations: batch over (pod, data) when divisible."""
+    return P(_dp_entry(mesh, batch), None, None)
+
+
+def head_act_spec(mesh: Mesh, batch: int, n_heads: int, head_dim: int,
+                  dist: Optional[DistConfig] = None) -> P:
+    """[B, S, H, hd]: heads over model when divisible; head_dim fallback
+    only when DistConfig allows it (see shard_head_dim_fallback)."""
+    dist = dist or DistConfig()
+    m = mesh.shape.get("model", 1)
+    if m > 1 and n_heads % m == 0:
+        h_ax, d_ax = "model", None
+    elif (m > 1 and head_dim % m == 0 and dist.shard_head_dim_fallback):
+        h_ax, d_ax = None, "model"
+    else:
+        h_ax, d_ax = None, None
+    return P(_dp_entry(mesh, batch), None, h_ax, d_ax)
+
+
+def ff_act_spec(mesh: Mesh, batch: int, ff: int) -> P:
+    """[B, S, F] MLP hidden: F over model when divisible."""
+    m = mesh.shape.get("model", 1)
+    f_ax = "model" if (m > 1 and ff % m == 0) else None
+    return P(_dp_entry(mesh, batch), None, f_ax)

@@ -1,0 +1,42 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On the CPU container the kernels execute in interpret mode; on TPU set
+``interpret=False`` (the default flips on TPU backends automatically).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import l2_topk as _l2
+from repro.kernels import pq_adc as _pq
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def l2_topk(q, x, k: int = 10, block_n: int = 512,
+            interpret: bool | None = None):
+    """q [Q, d], x [N, d] -> (d2 [Q, k] ascending, ids [Q, k])."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return _l2.l2_topk(q, x, k=k, block_n=block_n, interpret=interpret)
+
+
+def pq_adc(lut, codes, block_n: int = 1024, interpret: bool | None = None):
+    """lut [M, 256] f32, codes [N, M] -> dists [N] f32."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return _pq.pq_adc(lut, codes, block_n=block_n, interpret=interpret)
+
+
+def flash_attention(q, k, v, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool | None = None):
+    """q [B, H, Sq, d]; k, v [B, H, Sk, d] -> [B, H, Sq, d]."""
+    interpret = _default_interpret() if interpret is None else interpret
+    fn = functools.partial(_fa.flash_attention, causal=causal,
+                           block_q=block_q, block_k=block_k,
+                           interpret=interpret)
+    return jax.vmap(jax.vmap(fn))(q, k, v)

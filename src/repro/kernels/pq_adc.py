@@ -1,0 +1,57 @@
+"""PQ asymmetric-distance computation (Pallas TPU) for the DiskANN
+baseline's in-memory guidance distances.
+
+TPU adaptation: the CPU implementation is M scalar L1-cache LUT gathers
+per point; TPUs have no scalar gather units, so the lookup becomes a
+one-hot matmul per subspace against the VMEM-resident LUT — MXU work
+instead of pointer chasing (DESIGN.md §2). Codes stream in [BN, M] blocks;
+the [M, 256] LUT stays resident.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(lut_ref, codes_ref, out_ref, *, m: int):
+    codes = codes_ref[...]                     # [BN, M] int32
+    lut = lut_ref[...]                         # [M, 256] f32
+    acc = jnp.zeros((codes.shape[0],), jnp.float32)
+    for sub in range(m):                       # M static, unrolled
+        onehot = (jax.lax.broadcasted_iota(
+            jnp.int32, (codes.shape[0], 256), 1)
+            == codes[:, sub][:, None]).astype(jnp.float32)
+        # [BN, 256] @ [256] on the MXU
+        acc = acc + jax.lax.dot_general(
+            onehot, lut[sub], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def pq_adc(lut: jax.Array, codes: jax.Array, block_n: int = 1024,
+           interpret: bool = True) -> jax.Array:
+    """lut [M, 256] f32; codes [N, M] int32/uint8 -> dists [N] f32."""
+    m = lut.shape[0]
+    n = codes.shape[0]
+    codes = codes.astype(jnp.int32)
+    block_n = min(block_n, n)
+    pad = (-n) % block_n
+    if pad:
+        codes = jnp.pad(codes, ((0, pad), (0, 0)))
+    grid = ((n + pad) // block_n,)
+    out = pl.pallas_call(
+        functools.partial(_kernel, m=m),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, 256), lambda i: (0, 0)),       # LUT resident
+            pl.BlockSpec((block_n, m), lambda i: (i, 0)),   # codes stream
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n + pad,), jnp.float32),
+        interpret=interpret,
+    )(lut, codes)
+    return out[:n]

@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def l2_topk_ref(q: jax.Array, x: jax.Array, k: int):
+    """q [Q, d], x [N, d] -> (d2 [Q, k], ids [Q, k]) ascending."""
+    q = q.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    d2 = (jnp.sum(q * q, -1)[:, None] - 2 * q @ x.T
+          + jnp.sum(x * x, -1)[None, :])
+    d2 = jnp.maximum(d2, 0.0)
+    neg, ids = jax.lax.top_k(-d2, k)
+    return -neg, ids.astype(jnp.int32)
+
+
+def pq_adc_ref(lut: jax.Array, codes: jax.Array):
+    """lut [M, 256] f32, codes [N, M] int32 -> dists [N] f32."""
+    m = lut.shape[0]
+    return jnp.sum(lut[jnp.arange(m)[None, :], codes], axis=1)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True):
+    """q [B, H, Sq, d]; k, v [B, H, Sk, d] -> [B, H, Sq, d]."""
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        sq, sk = q.shape[2], k.shape[2]
+        qp = jnp.arange(sq)[:, None] + (sk - sq)
+        kp = jnp.arange(sk)[None, :]
+        s = jnp.where(kp <= qp, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

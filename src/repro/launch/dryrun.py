@@ -1,0 +1,403 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+cell on the production meshes and record memory / cost / collective
+artifacts for the roofline analysis (EXPERIMENTS.md §Dry-run, §Roofline).
+
+The two lines above MUST stay first: jax locks the device count on first
+initialization. Do not set this flag anywhere global — smoke tests and
+benchmarks must see 1 device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun \
+      --arch all --shape all --mesh both --out artifacts/dryrun
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, cell_is_applicable, get_config
+from repro.distributed.context import mesh_context
+from repro.distributed.sharding import DistConfig, batch_spec
+from repro.launch import specs as S
+from repro.launch.mesh import make_production_mesh
+from repro.models import decode_step, forward, init_cache, prefill
+from repro.training.optimizer import OptimizerConfig
+from repro.training.train_step import TrainConfig, make_train_step
+
+_COLL_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+_SHAPE_RE = re.compile(r"\b(pred|s4|s8|s16|s32|s64|u4|u8|u16|u32|u64|"
+                       r"f4|f8\w*|bf16|f16|f32|f64|c64|c128)\[([0-9,]*)\]")
+_BYTES = {"pred": 1, "s4": 1, "s8": 1, "u4": 1, "u8": 1, "s16": 2, "u16": 2,
+          "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "c64": 8,
+          "s64": 8, "u64": 8, "f64": 8, "c128": 16}
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum output-shape bytes of every collective op in the (per-device)
+    HLO. Convention documented in EXPERIMENTS.md: bytes are the per-device
+    payload of each collective instruction."""
+    out: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or "=" not in line:
+            continue
+        op = m.group(1)
+        lhs = line.split("=", 1)[0] + "=" + line.split("=", 1)[1].split(
+            m.group(1))[0]
+        total = 0
+        for dt, dims in _SHAPE_RE.findall(lhs):
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * _BYTES.get(dt.split("{")[0], 4)
+        out[op] = out.get(op, 0) + total
+        out["total"] = out.get("total", 0) + total
+    return out
+
+
+def arch_opt_config(arch: str) -> OptimizerConfig:
+    """Per-arch optimizer memory policy (see DESIGN.md kimi note)."""
+    if arch.startswith("kimi"):
+        return OptimizerConfig(state_dtype="bfloat16", factored=True)
+    if arch in ("command-r-plus-104b", "dbrx-132b", "internvl2-76b"):
+        return OptimizerConfig(state_dtype="float32", factored=True)
+    return OptimizerConfig()
+
+
+def arch_train_config(arch: str, shape, multi_pod: bool,
+                      target_tokens_per_microbatch: int = 32768
+                      ) -> TrainConfig:
+    """Microbatch (grad-accumulation) selection: cap the flash-attention
+    residual stash (q,k,v,out per layer ~ tokens x d_model) per chip."""
+    dp = 32 if multi_pod else 16
+    tokens_per_chip = shape.seq_len * max(shape.global_batch // dp, 1)
+    micro = max(1, tokens_per_chip // target_tokens_per_microbatch)
+    # microbatches must divide the per-shard batch
+    per_shard = max(shape.global_batch // dp, 1)
+    while per_shard % micro:
+        micro -= 1
+    accum_dtype = "bfloat16" if arch.startswith("kimi") else "float32"
+    return TrainConfig(microbatches=micro, grad_accum_dtype=accum_dtype)
+
+
+def _replicated(mesh, tree):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               dist: Optional[DistConfig] = None,
+               extra_tag: str = "") -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = cell_is_applicable(cfg, shape)
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind, "tag": extra_tag,
+    }
+    if not ok:
+        rec["status"] = reason
+        return rec
+
+    dist = dist or DistConfig()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    with mesh_context(mesh, dist):
+        pshard = S.params_shardings(cfg, mesh, dist)
+        aparams = S.abstract_params(cfg)
+
+        if shape.kind == "train":
+            ocfg = arch_opt_config(arch)
+            oshard = S.opt_shardings(cfg, ocfg, mesh, dist)
+            aopt = S.abstract_opt_state(cfg, ocfg)
+            batch = S.train_inputs(cfg, shape)
+            bshard = S.batch_shardings(batch, mesh, dist)
+            tcfg = arch_train_config(arch, shape, multi_pod)
+            rec["microbatches"] = tcfg.microbatches
+            step = make_train_step(cfg, ocfg, tcfg)
+            metrics_shard = {k: NamedSharding(mesh, P()) for k in
+                             ("loss", "aux_loss", "grad_norm", "lr",
+                              "total_loss")}
+            jitted = jax.jit(
+                step,
+                in_shardings=(pshard, oshard, bshard),
+                out_shardings=(pshard, oshard, metrics_shard),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(aparams, aopt, batch)
+        elif shape.kind == "prefill":
+            batch = S.prefill_inputs(cfg, shape)
+            bshard = S.batch_shardings(batch, mesh, dist)
+
+            def prefill_step(params, batch):
+                return prefill(params, batch, cfg)
+
+            cache_abs = jax.eval_shape(
+                lambda: init_cache(cfg, shape.global_batch, shape.seq_len))
+            cshard = S.cache_shardings(cfg, cache_abs, shape.global_batch,
+                                       mesh, dist)
+            logits_shard = NamedSharding(
+                mesh, batch_spec(shape.global_batch, mesh, dist, 2))
+            jitted = jax.jit(prefill_step, in_shardings=(pshard, bshard),
+                             out_shardings=(logits_shard, cshard))
+            lowered = jitted.lower(aparams, batch)
+        else:  # decode
+            tokens, cache, cur_pos = S.decode_inputs(cfg, shape)
+            cshard = S.cache_shardings(cfg, cache, shape.global_batch,
+                                       mesh, dist)
+            tshard = NamedSharding(
+                mesh, batch_spec(shape.global_batch, mesh, dist, 1))
+            logits_shard = NamedSharding(
+                mesh, batch_spec(shape.global_batch, mesh, dist, 2))
+
+            def serve_step(params, tokens, cache, cur_pos):
+                return decode_step(params, tokens, cache, cur_pos, cfg)
+
+            jitted = jax.jit(
+                serve_step,
+                in_shardings=(pshard, tshard, cshard,
+                              NamedSharding(mesh, P())),
+                out_shardings=(logits_shard, cshard),
+                donate_argnums=(2,),
+            )
+            lowered = jitted.lower(aparams, tokens, cache, cur_pos)
+
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+
+        try:
+            mem = compiled.memory_analysis()
+            rec["memory"] = {
+                k: int(getattr(mem, k)) for k in (
+                    "argument_size_in_bytes", "output_size_in_bytes",
+                    "temp_size_in_bytes", "generated_code_size_in_bytes",
+                    "alias_size_in_bytes")
+                if hasattr(mem, k)}
+        except Exception as e:  # pragma: no cover
+            rec["memory"] = {"error": str(e)}
+        try:
+            cost = compiled.cost_analysis()
+            if isinstance(cost, list):
+                cost = cost[0]
+            rec["cost"] = {k: float(v) for k, v in cost.items()
+                           if k in ("flops", "bytes accessed",
+                                    "optimal_seconds", "utilization")}
+        except Exception as e:  # pragma: no cover
+            rec["cost"] = {"error": str(e)}
+        try:
+            from repro.launch import hlo_costs
+            txt = compiled.as_text()
+            rec["hlo_costs"] = hlo_costs.analyze(txt)
+            rec["collectives"] = rec["hlo_costs"]["collectives"]
+        except Exception as e:  # pragma: no cover
+            rec["hlo_costs"] = {"error": str(e)}
+            rec["collectives"] = collective_bytes(lowered.as_text())
+        rec["status"] = "OK"
+    return rec
+
+
+ANNS_CELLS = {
+    # paper-scale datasets (Table III): database sharded over ALL mesh
+    # devices (the pod's aggregate HBM plays the distributed-storage
+    # tier); per-rank probe working set = p_loc probed partitions x cap.
+    "anns-bigann-1b": {"n": 1_000_000_000, "d": 128, "q": 4096, "k": 100,
+                       "cap": 128, "p_loc": 1, "p_agg": 0.01},
+    "anns-deep-1b": {"n": 1_000_000_000, "d": 96, "q": 4096, "k": 100,
+                     "cap": 128, "p_loc": 1, "p_agg": 0.01},
+    "anns-sift-10m": {"n": 10_000_000, "d": 128, "q": 4096, "k": 100,
+                      "cap": 16, "p_loc": 2, "p_agg": 0.2},
+}
+
+
+def lower_anns_cell(name: str, multi_pod: bool, kind: str = "serve"
+                    ) -> Dict[str, Any]:
+    """Lower the ANNS data-plane steps (serve scan / build assign) on the
+    production mesh — the paper's own system's dry-run rows."""
+    from repro.core.distributed import make_anns_assign_step, \
+        make_anns_serve_step
+
+    spec = ANNS_CELLS[name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec: Dict[str, Any] = {
+        "arch": name, "shape": kind,
+        "mesh": "2x16x16" if multi_pod else "16x16", "kind": kind,
+        "tag": "",
+    }
+    n_dev = 1
+    for a in mesh.axis_names:
+        n_dev *= mesh.shape[a]
+    dp = n_dev // mesh.shape["model"]
+    mp = mesh.shape["model"]
+    t0 = time.time()
+    with mesh:
+        if kind == "serve":
+            step = make_anns_serve_step(mesh, k=spec["k"])
+            q = jax.ShapeDtypeStruct((spec["q"], spec["d"]), jnp.float32)
+            db = jax.ShapeDtypeStruct((spec["n"] // n_dev * n_dev,
+                                       spec["d"]), jnp.float32)
+            rows = jax.ShapeDtypeStruct(
+                (spec["q"], spec["p_loc"] * spec["cap"]), jnp.int32)
+            lowered = jax.jit(step).lower(q, db, rows)
+        else:
+            row_chunk, col_chunk = 4096, 65536
+            step = make_anns_assign_step(mesh, k=8, row_chunk=row_chunk,
+                                         col_chunk=col_chunk)
+            # one build shard's worth of residuals per pass; agg points
+            # (p_agg * n) sharded over the model axis; sizes rounded to
+            # the chunked-scan tiling
+            m_agg = max(int(spec["n"] * spec["p_agg"])
+                        // (mp * col_chunk), 1) * mp * col_chunk
+            n_res = max(spec["n"] // 64 // (dp * row_chunk), 1) \
+                * dp * row_chunk
+            res = jax.ShapeDtypeStruct((n_res, spec["d"]), jnp.float32)
+            agg = jax.ShapeDtypeStruct((m_agg, spec["d"]), jnp.float32)
+            lowered = jax.jit(step).lower(res, agg)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+        try:
+            mem = compiled.memory_analysis()
+            rec["memory"] = {
+                k: int(getattr(mem, k)) for k in (
+                    "argument_size_in_bytes", "output_size_in_bytes",
+                    "temp_size_in_bytes")
+                if hasattr(mem, k)}
+        except Exception as e:
+            rec["memory"] = {"error": str(e)}
+        try:
+            from repro.launch import hlo_costs
+            rec["hlo_costs"] = hlo_costs.analyze(compiled.as_text())
+            rec["collectives"] = rec["hlo_costs"]["collectives"]
+        except Exception as e:
+            rec["hlo_costs"] = {"error": str(e)}
+        rec["status"] = "OK"
+    return rec
+
+
+def cell_path(out_dir: str, rec_or_arch, shape=None, mesh=None,
+              tag: str = "") -> str:
+    if isinstance(rec_or_arch, dict):
+        r = rec_or_arch
+        arch, shape, mesh, tag = r["arch"], r["shape"], r["mesh"], r.get(
+            "tag", "")
+    else:
+        arch = rec_or_arch
+    suffix = f"__{tag}" if tag else ""
+    return os.path.join(out_dir, mesh.replace("x", "_"),
+                        f"{arch}__{shape}{suffix}.json")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                       "both"])
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="", help="variant tag (perf configs)")
+    ap.add_argument("--fsdp-over-pod", action="store_true")
+    ap.add_argument("--shard-hd-fallback", action="store_true",
+                    help="reproduce the pre-optimization baseline sharding")
+    ap.add_argument("--attn-p-bf16", action="store_true",
+                    help="stage attention probability tiles in bf16")
+    ap.add_argument("--anns", action="store_true",
+                    help="run the paper's ANNS data-plane cells instead")
+    args = ap.parse_args()
+
+    if args.anns:
+        failures = 0
+        meshes = {"single": [False], "multi": [True],
+                  "both": [False, True]}[args.mesh]
+        for name in ANNS_CELLS:
+            for kind in ("serve", "assign"):
+                for multi_pod in meshes:
+                    mesh_tag = "2x16x16" if multi_pod else "16x16"
+                    path = cell_path(args.out, name, kind, mesh_tag)
+                    if os.path.exists(path) and not args.force:
+                        print(f"[skip-cached] {name} {kind} {mesh_tag}")
+                        continue
+                    print(f"[dryrun-anns] {name} {kind} {mesh_tag} ...",
+                          flush=True)
+                    try:
+                        rec = lower_anns_cell(name, multi_pod, kind)
+                    except Exception as e:
+                        rec = {"arch": name, "shape": kind,
+                               "mesh": mesh_tag, "tag": "",
+                               "status": f"FAIL: {type(e).__name__}: {e}",
+                               "traceback": traceback.format_exc()[-2000:]}
+                        failures += 1
+                    os.makedirs(os.path.dirname(path), exist_ok=True)
+                    with open(path, "w") as f:
+                        json.dump(rec, f, indent=2)
+                    print(f"  -> {rec['status']}", flush=True)
+        print(f"done; failures={failures}")
+        raise SystemExit(1 if failures else 0)
+
+    arch_ids = [a.replace("_", "-") for a in ARCH_IDS] \
+        if args.arch == "all" else args.arch.split(",")
+    shape_names = list(SHAPES) if args.shape == "all" \
+        else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    dist = DistConfig(fsdp_over_pod=args.fsdp_over_pod,
+                      shard_head_dim_fallback=args.shard_hd_fallback)
+    if args.attn_p_bf16:
+        os.environ["REPRO_ATTN_P_BF16"] = "1"
+    failures = 0
+    for arch in arch_ids:
+        for shape_name in shape_names:
+            for multi_pod in meshes:
+                mesh_tag = "2x16x16" if multi_pod else "16x16"
+                path = cell_path(args.out, arch, shape_name, mesh_tag,
+                                 args.tag)
+                if os.path.exists(path) and not args.force:
+                    print(f"[skip-cached] {arch} {shape_name} {mesh_tag}")
+                    continue
+                print(f"[dryrun] {arch} {shape_name} {mesh_tag} ...",
+                      flush=True)
+                try:
+                    rec = lower_cell(arch, shape_name, multi_pod, dist,
+                                     args.tag)
+                except Exception as e:
+                    rec = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_tag, "tag": args.tag,
+                           "status": f"FAIL: {type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-2000:]}
+                    failures += 1
+                os.makedirs(os.path.dirname(path), exist_ok=True)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=2)
+                status = rec["status"]
+                mem = rec.get("memory", {})
+                hc = rec.get("hlo_costs", {})
+                print(f"  -> {status}"
+                      + (f" | temp={mem.get('temp_size_in_bytes', 0)/2**30:.2f}GiB"
+                         f" args={mem.get('argument_size_in_bytes', 0)/2**30:.2f}GiB"
+                         f" flops={hc.get('flops', 0):.3e}"
+                         f" hbm={hc.get('hbm_bytes', 0)/2**30:.1f}GiB"
+                         f" coll={rec.get('collectives', {}).get('total', 0)/2**30:.2f}GiB"
+                         if status == "OK" else ""),
+                      flush=True)
+    print(f"done; failures={failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

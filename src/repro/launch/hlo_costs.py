@@ -1,0 +1,236 @@
+"""Trip-count-aware cost extraction from compiled HLO text.
+
+``compiled.cost_analysis()`` counts every while-loop body ONCE regardless
+of trip count (verified empirically: a 10-iteration scanned matmul reports
+the flops of a single matmul). Since the whole model is scan-over-layers
+(+ microbatch and attention-chunk scans), that undercounts by 20-100x.
+
+This parser walks the compiled module's call graph, multiplying costs by
+``backend_config.known_trip_count`` at each while, and reports per device:
+
+  * flops      2*M*N*K per dot (+1 flop/elt for elementwise, 2/elt reduce)
+  * hbm_bytes  TPU-fusion-aware traffic model: dots count lhs+rhs+out
+               bytes; reduce/gather/scatter/dynamic-(update-)slice/sort and
+               collectives count output bytes; elementwise chains are
+               assumed fused (0 HBM traffic) — the CPU module's unfused
+               elementwise ops would otherwise inflate traffic ~50x.
+               Documented in EXPERIMENTS.md §Roofline methodology.
+  * collectives  per-type payload bytes (per-device output bytes)
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_BYTES = {"pred": 1, "s4": 1, "s8": 1, "u4": 1, "u8": 1, "s16": 2, "u16": 2,
+          "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "c64": 8,
+          "s64": 8, "u64": 8, "f64": 8, "c128": 16, "token": 0,
+          "f8e4m3fn": 1, "f8e5m2": 1}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_CALLED_RE = re.compile(r"(?:condition|body|calls|to_apply)=%([\w\.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum",
+    "exponential", "log", "tanh", "rsqrt", "sqrt", "power", "negate", "abs",
+    "compare", "select", "and", "or", "xor", "convert",
+    "exponential-minus-one", "logistic", "cosine", "sine", "floor", "ceil",
+    "round-nearest-even", "clamp", "sign",
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# ops whose outputs transit HBM in a fused TPU program
+_TRAFFIC_OPS = {"reduce", "gather", "scatter", "dynamic-slice",
+                "dynamic-update-slice", "sort", "concatenate", "pad",
+                "reduce-window", "transpose", "slice", "cumsum"}
+
+
+def _shape_list(text: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _BYTES:
+            continue
+        out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _nbytes(shapes) -> float:
+    total = 0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _BYTES[dt]
+    return float(total)
+
+
+def _nelems(shapes) -> float:
+    total = 0
+    for _, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n
+    return float(total)
+
+
+class Instr:
+    __slots__ = ("name", "op", "out_shapes", "rhs", "called", "trip")
+
+    def __init__(self, name, op, out_shapes, rhs, called, trip):
+        self.name = name
+        self.op = op
+        self.out_shapes = out_shapes
+        self.rhs = rhs
+        self.called = called
+        self.trip = trip
+
+
+def _parse_op(rhs: str) -> Optional[str]:
+    m = re.search(r"\s([a-z][a-z0-9\-]*)\(", rhs)
+    return m.group(1) if m else None
+
+
+def parse_module(text: str) -> Dict[str, List[Instr]]:
+    comps: Dict[str, List[Instr]] = {}
+    cur: Optional[str] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        header = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{",
+                          stripped)
+        if header and stripped.endswith("{"):
+            cur = header.group(1)
+            comps[cur] = []
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        op = _parse_op(rhs)
+        if op is None:
+            continue
+        out_part = rhs.split(f" {op}(")[0]
+        out_shapes = _shape_list(out_part)
+        called = _CALLED_RE.findall(rhs)
+        tm = _TRIP_RE.search(rhs)
+        trip = int(tm.group(1)) if tm else None
+        comps[cur].append(Instr(name, op, out_shapes, rhs, called, trip))
+    return comps
+
+
+def _operand_names(instr: Instr) -> List[str]:
+    m = re.search(r"\s[a-z][a-z0-9\-]*\((.*?)\)(?:,|$)", instr.rhs)
+    if not m:
+        return []
+    return re.findall(r"%([\w\.\-]+)", m.group(1))
+
+
+def _dot_costs(instr: Instr, symtab) -> Tuple[float, float]:
+    """(flops, hbm_bytes) for a dot."""
+    out_elems = _nelems(instr.out_shapes)
+    ops = _operand_names(instr)
+    k = 1.0
+    operand_bytes = 0.0
+    if ops:
+        lhs_shapes = symtab.get(ops[0])
+        cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.rhs)
+        if lhs_shapes and cm:
+            dims = lhs_shapes[0][1]
+            for idx in cm.group(1).split(","):
+                if idx:
+                    k *= dims[int(idx)]
+        for o in ops[:2]:
+            if o in symtab:
+                operand_bytes += _nbytes(symtab[o])
+    flops = 2.0 * out_elems * k
+    hbm = operand_bytes + _nbytes(instr.out_shapes)
+    return flops, hbm
+
+
+def analyze(text: str, entry: Optional[str] = None) -> Dict:
+    comps = parse_module(text)
+    if entry is None:
+        m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", text, re.M)
+        entry = m.group(1) if m else next(iter(comps))
+
+    symtabs = {c: {i.name: i.out_shapes for i in instrs}
+               for c, instrs in comps.items()}
+
+    totals = defaultdict(float)
+    coll = defaultdict(float)
+    coll_shapes = defaultdict(float)
+    stack: List[str] = []
+
+    # attention/SSD-interior traffic: score & probability tiles a Pallas
+    # flash/SSD kernel keeps in VMEM. Identified by the einsum labels the
+    # jax scopes leave in op metadata.
+    _ATTN_TAG = re.compile(r"bkgq|bcij|bchpn|bcqn")
+
+    def _is_interior(ins: Instr) -> bool:
+        return bool(_ATTN_TAG.search(ins.rhs))
+
+    def add_bytes(ins, b):
+        totals["hbm_bytes"] += b
+        if _is_interior(ins):
+            totals["hbm_bytes_attn_interior"] += b
+
+    def walk(comp: str, mult: float, in_fusion: bool):
+        if comp not in comps or comp in stack:
+            return
+        stack.append(comp)
+        symtab = symtabs[comp]
+        for ins in comps[comp]:
+            if ins.op == "while":
+                trip = ins.trip or 1
+                for callee in ins.called:
+                    walk(callee, mult * trip, in_fusion)
+                continue
+            if ins.op in ("fusion", "call", "conditional", "map",
+                          "custom-call"):
+                fused = ins.op in ("fusion", "custom-call")
+                for callee in ins.called:
+                    walk(callee, mult, in_fusion or fused)
+                if fused and not in_fusion:
+                    add_bytes(ins, _nbytes(ins.out_shapes) * mult)
+                continue
+            if ins.op == "dot":
+                fl, hb = _dot_costs(ins, symtab)
+                totals["flops"] += fl * mult
+                if not in_fusion:
+                    add_bytes(ins, hb * mult)
+                continue
+            if ins.op in _COLLECTIVES:
+                b = _nbytes(ins.out_shapes) * mult
+                coll[ins.op] += b
+                coll["total"] += b
+                coll_shapes[f"{ins.op}:{ins.out_shapes}"] += b
+                if not in_fusion:
+                    totals["hbm_bytes"] += b
+                continue
+            if ins.op in _ELEMENTWISE:
+                totals["flops"] += _nelems(ins.out_shapes) * mult
+            elif ins.op == "reduce":
+                totals["flops"] += _nelems(ins.out_shapes) * mult * 2
+            if not in_fusion and ins.op in _TRAFFIC_OPS:
+                add_bytes(ins, _nbytes(ins.out_shapes) * mult)
+        stack.pop()
+
+    walk(entry, 1.0, False)
+    top_coll = dict(sorted(coll_shapes.items(), key=lambda kv: -kv[1])[:8])
+    return {
+        "flops": totals["flops"],
+        "hbm_bytes": totals["hbm_bytes"],
+        "hbm_bytes_attn_interior": totals["hbm_bytes_attn_interior"],
+        "collectives": dict(coll),
+        "top_collectives": top_coll,
+    }

@@ -1,0 +1,30 @@
+"""Mesh construction. A FUNCTION (not module-level constant) so importing
+this module never touches jax device state (see spec: smoke tests and
+benches must see 1 device; only dryrun.py forces 512 host devices).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model_axis: int = 1):
+    """Mesh over whatever devices exist (tests / CPU runs)."""
+    n = len(jax.devices())
+    assert n % model_axis == 0
+    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    """Mesh axes that act as data parallelism (pod folds into data)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def model_axes(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a == "model")

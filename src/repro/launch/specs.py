@@ -1,0 +1,107 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch x shape) cell.
+
+``input_specs()`` mirrors the shannon/kernels pattern: weak-type-correct,
+shardable, zero device allocation — the dry-run lowers/compiles against
+these without ever materializing a 1T-parameter model.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import (
+    DistConfig,
+    batch_spec,
+    cache_spec,
+    param_specs,
+)
+from repro.models import init_cache, init_params
+from repro.training.optimizer import OptimizerConfig, init_state
+
+SDS = jax.ShapeDtypeStruct
+
+
+def abstract_params(cfg: ModelConfig):
+    """Param ShapeDtypeStructs via eval_shape (no allocation)."""
+    return jax.eval_shape(
+        lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+
+
+def abstract_opt_state(cfg: ModelConfig, ocfg: OptimizerConfig):
+    aparams = abstract_params(cfg)
+    return jax.eval_shape(lambda p: init_state(p, ocfg), aparams)
+
+
+def train_inputs(cfg: ModelConfig, shape: ShapeConfig):
+    b, s = shape.global_batch, shape.seq_len
+    batch: Dict[str, Any] = {
+        "tokens": SDS((b, s), jnp.int32),
+        "labels": SDS((b, s), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = SDS((b, cfg.vision_tokens, cfg.d_model),
+                                     jnp.float32)
+    if cfg.enc_layers:
+        batch["frames"] = SDS((b, cfg.enc_frames, cfg.d_model), jnp.float32)
+    return batch
+
+
+def prefill_inputs(cfg: ModelConfig, shape: ShapeConfig):
+    batch = train_inputs(cfg, shape)
+    del batch["labels"]
+    return batch
+
+
+def decode_inputs(cfg: ModelConfig, shape: ShapeConfig):
+    b, s = shape.global_batch, shape.seq_len
+    tokens = SDS((b, 1), jnp.int32)
+    cache = jax.eval_shape(lambda: init_cache(cfg, b, s))
+    cur_pos = SDS((), jnp.int32)
+    return tokens, cache, cur_pos
+
+
+def batch_shardings(batch, mesh: Mesh, dist: Optional[DistConfig] = None):
+    def one(leaf):
+        return NamedSharding(
+            mesh, batch_spec(leaf.shape[0], mesh, dist,
+                             extra_dims=len(leaf.shape) - 1))
+    return jax.tree.map(one, batch)
+
+
+def cache_shardings(cfg: ModelConfig, cache, batch_size: int, mesh: Mesh,
+                    dist: Optional[DistConfig] = None):
+    def one(path, leaf):
+        name = str(getattr(path[-1], "key", path[-1]))
+        seq_len = leaf.shape[2] if name in ("k", "v", "xk", "xv") else None
+        specs = cache_spec(cfg, batch_size, mesh, dist, seq_len=seq_len)
+        spec = specs.get(name, P())
+        # clip spec length to leaf rank (conv cache has rank 4)
+        entries = list(spec)[: len(leaf.shape)]
+        entries += [None] * (len(leaf.shape) - len(entries))
+        return NamedSharding(mesh, P(*entries))
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def params_shardings(cfg: ModelConfig, mesh: Mesh,
+                     dist: Optional[DistConfig] = None):
+    aparams = abstract_params(cfg)
+    specs = param_specs(aparams, mesh, dist)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_shardings(cfg: ModelConfig, ocfg: OptimizerConfig, mesh: Mesh,
+                  dist: Optional[DistConfig] = None):
+    """Optimizer-state shardings: m/v inherit the param rules (leaf names
+    are preserved beneath m/ and v/); factored row/col stats derive from
+    the parent param's rule minus the reduced dim (handled in sharding.py
+    via the parent name in the path)."""
+    astate = abstract_opt_state(cfg, ocfg)
+    specs = param_specs(astate, mesh, dist)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

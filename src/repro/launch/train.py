@@ -1,0 +1,76 @@
+"""Training launcher: any assigned arch (reduced or full config) on the
+local mesh, with checkpoint/resume. On a real pod this is the per-host
+entry point (jax.distributed.initialize + the production mesh); on CPU it
+drives reduced configs end-to-end.
+
+    PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+        --reduced --steps 100
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
+from repro.configs import get_config
+from repro.data.lm import DataConfig, batch_at
+from repro.distributed.context import mesh_context
+from repro.distributed.sharding import DistConfig
+from repro.launch.mesh import make_local_mesh
+from repro.models import init_params
+from repro.training.optimizer import OptimizerConfig, init_state
+from repro.training.train_step import TrainConfig, make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    ocfg = OptimizerConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                           total_steps=args.steps)
+    tcfg = TrainConfig(microbatches=args.microbatches)
+    dcfg = DataConfig(seed=0, batch_size=args.batch, seq_len=args.seq)
+
+    mesh = make_local_mesh()
+    with mesh_context(mesh, DistConfig()):
+        step_fn = jax.jit(make_train_step(cfg, ocfg, tcfg))
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        opt = init_state(params, ocfg)
+        n = sum(x.size for x in jax.tree.leaves(params))
+        print(f"{cfg.arch_id}: {n/1e6:.1f}M params on {mesh.shape}")
+
+        start = 0
+        if args.ckpt_dir and latest_step(args.ckpt_dir + "/p") is not None:
+            start, params, _ = load_checkpoint(args.ckpt_dir + "/p",
+                                               like=params)
+            _, opt, _ = load_checkpoint(args.ckpt_dir + "/o", like=opt)
+            print(f"resumed at step {start}")
+
+        t0 = time.time()
+        for s in range(start, args.steps):
+            params, opt, m = step_fn(params, opt, batch_at(dcfg, cfg, s))
+            if s % 10 == 0 or s == args.steps - 1:
+                print(f"step {s:4d} loss={float(m['loss']):.4f} "
+                      f"gnorm={float(m['grad_norm']):.2f} "
+                      f"({(s - start + 1) / max(time.time() - t0, 1e-9):.1f}"
+                      " steps/s)")
+            if args.ckpt_dir and (s + 1) % args.ckpt_every == 0:
+                save_checkpoint(args.ckpt_dir + "/p", s + 1, params)
+                save_checkpoint(args.ckpt_dir + "/o", s + 1, opt)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,247 @@
+"""GQA attention.
+
+Training/prefill path: flash-style chunked online-softmax with a custom
+VJP — the backward recomputes per-chunk scores from (q, k, v, out, lse)
+instead of storing them, so memory is O(S·chunk) per device rather than
+O(S²) (the naive chunked scan stores the probability stacks in its scan
+residuals; observed 32 GiB/device buffers on the 4k train cell before this
+fix — see EXPERIMENTS.md §Perf).
+
+Decode path: single-token attention against (optionally windowed +
+meta-token) KV caches.
+
+The Pallas `flash_attention` kernel targets TPU for the same computation;
+this jnp path is what the dry-run compiles (see DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _p_dtype(ref_dtype):
+    """Probability-tile dtype for the p@v / p^T@do matmuls. bf16 halves the
+    dominant HBM-staged buffers of the jnp flash path (REPRO_ATTN_P_BF16=1,
+    set by the perf dry-runs; EXPERIMENTS.md §Perf). Accumulation stays
+    f32 via preferred_element_type."""
+    if os.environ.get("REPRO_ATTN_P_BF16") == "1":
+        return jnp.bfloat16
+    return jnp.float32
+
+
+def _group(x, n_kv):
+    """[B, S, H, D] -> [B, KVH, G, S, D] without expanding K/V."""
+    b, s, h, d = x.shape
+    g = h // n_kv
+    return x.reshape(b, s, n_kv, g, d).transpose(0, 2, 3, 1, 4)
+
+
+def _ungroup(x):
+    """[B, KVH, G, S, D] -> [B, S, H, D]."""
+    b, kvh, g, s, d = x.shape
+    return x.transpose(0, 3, 1, 2, 4).reshape(b, s, kvh * g, d)
+
+
+def _mask_block(q_pos, k_pos, causal, window, meta_tokens, dw):
+    """[Sq, C] boolean attend-mask. ``dw`` (traced f32 scalar, 0 or 1)
+    disables the sliding window (per-layer global-attention flag;
+    meta tokens at positions [0, meta_tokens) are always visible)."""
+    qp = q_pos[:, None]
+    kp = k_pos[None, :]
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=bool)
+    if causal:
+        m &= kp <= qp
+    if window and window > 0:
+        in_window = kp > qp - window
+        if meta_tokens:
+            in_window |= kp < meta_tokens
+        in_window |= dw > 0.5
+        m &= in_window
+    return m
+
+
+def _chunk_kv(k, v, chunk):
+    """[B, Sk, KVH, D] -> ([Nc, B, KVH, C, D] x2, k_pos [Nc, C])."""
+    b, sk, kvh, d = k.shape
+    n_chunks = -(-sk // chunk)
+    pad = n_chunks * chunk - sk
+    k_pos = jnp.arange(sk)
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad), constant_values=2**30)
+    kc = k.reshape(b, n_chunks, chunk, kvh, d).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(b, n_chunks, chunk, kvh, d).transpose(1, 0, 3, 2, 4)
+    return kc, vc, k_pos.reshape(n_chunks, chunk)
+
+
+def _flash_fwd_impl(q, k, v, dw, causal, window, meta_tokens, chunk):
+    b, sq, h, d = q.shape
+    sk, n_kv = k.shape[1], k.shape[2]
+    g = h // n_kv
+    scale = 1.0 / (d ** 0.5)
+    q_pos = jnp.arange(sq) + (sk - sq if causal else 0)
+
+    qg = _group(q, n_kv).astype(jnp.float32) * scale
+    kc, vc, kpc = _chunk_kv(k, v, min(chunk, sk))
+
+    def step(carry, inp):
+        m_run, l_run, acc = carry
+        kb, vb, kp = inp
+        s = jnp.einsum("bkgqd,bkcd->bkgqc", qg, kb.astype(jnp.float32))
+        mask = _mask_block(q_pos, kp, causal, window, meta_tokens, dw)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_run - m_new)
+        l_new = l_run * corr + jnp.sum(p, axis=-1)
+        pd = _p_dtype(vb.dtype)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgqc,bkcd->bkgqd", p.astype(pd), vb.astype(pd),
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, n_kv, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, n_kv, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, n_kv, g, sq, d), jnp.float32)
+    (m_f, l_f, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kc, vc, kpc))
+
+    l_safe = jnp.maximum(l_f, 1e-30)
+    out_g = acc / l_safe[..., None]
+    lse = m_f + jnp.log(l_safe)
+    return out_g, lse
+
+
+@functools.lru_cache(maxsize=None)
+def _make_flash(causal, window, meta_tokens, chunk):
+    """custom_vjp flash attention specialized to static config."""
+
+    @jax.custom_vjp
+    def flash(q, k, v, dw):
+        out_g, _ = _flash_fwd_impl(q, k, v, dw, causal, window,
+                                   meta_tokens, chunk)
+        return _ungroup(out_g).astype(q.dtype)
+
+    def fwd(q, k, v, dw):
+        out_g, lse = _flash_fwd_impl(q, k, v, dw, causal, window,
+                                     meta_tokens, chunk)
+        out = _ungroup(out_g).astype(q.dtype)
+        return out, (q, k, v, dw, out_g, lse)
+
+    def bwd(res, dout):
+        q, k, v, dw, out_g, lse = res
+        b, sq, h, d = q.shape
+        sk, n_kv = k.shape[1], k.shape[2]
+        scale = 1.0 / (d ** 0.5)
+        q_pos = jnp.arange(sq) + (sk - sq if causal else 0)
+
+        qg = _group(q, n_kv).astype(jnp.float32)
+        dog = _group(dout, n_kv).astype(jnp.float32)   # [B,KVH,G,Sq,D]
+        delta = jnp.sum(dog * out_g, axis=-1)          # [B,KVH,G,Sq]
+        kc, vc, kpc = _chunk_kv(k, v, min(chunk, sk))
+
+        def step(dq_acc, inp):
+            kb, vb, kp = inp
+            s = scale * jnp.einsum(
+                "bkgqd,bkcd->bkgqc", qg, kb.astype(jnp.float32))
+            mask = _mask_block(q_pos, kp, causal, window, meta_tokens, dw)
+            p = jnp.where(mask[None, None, None],
+                          jnp.exp(s - lse[..., None]), 0.0)
+            pd = _p_dtype(vb.dtype)
+            dv_c = jnp.einsum("bkgqc,bkgqd->bkcd", p.astype(pd),
+                              dog.astype(pd),
+                              preferred_element_type=jnp.float32)
+            dp = jnp.einsum("bkgqd,bkcd->bkgqc", dog, vb.astype(jnp.float32))
+            ds = (p * (dp - delta[..., None]) * scale)
+            dq_acc = dq_acc + jnp.einsum(
+                "bkgqc,bkcd->bkgqd", ds.astype(pd), kb.astype(pd),
+                preferred_element_type=jnp.float32)
+            dk_c = jnp.einsum("bkgqc,bkgqd->bkcd", ds.astype(pd),
+                              qg.astype(pd),
+                              preferred_element_type=jnp.float32)
+            return dq_acc, (dk_c, dv_c)
+
+        dq0 = jnp.zeros_like(qg)
+        dq_g, (dk_c, dv_c) = jax.lax.scan(step, dq0, (kc, vc, kpc))
+
+        def unchunk(xc):
+            # [Nc, B, KVH, C, D] -> [B, Sk(+pad), KVH, D] -> [B, Sk, ...]
+            nc, b_, kvh, c, d_ = xc.shape
+            x = xc.transpose(1, 0, 3, 2, 4).reshape(b_, nc * c, kvh, d_)
+            return x[:, :sk]
+
+        dq = _ungroup(dq_g).astype(q.dtype)
+        dk = unchunk(dk_c).astype(k.dtype)
+        dv = unchunk(dv_c).astype(v.dtype)
+        return dq, dk, dv, jnp.zeros((), jnp.float32)
+
+    flash.defvjp(fwd, bwd)
+    return flash
+
+
+def attention(q, k, v, *, q_pos=None, k_pos=None, causal=True, window=0,
+              meta_tokens=0, chunk=512, disable_window=None):
+    """Flash chunked attention. q [B,Sq,H,D]; k,v [B,Sk,KVH,D].
+
+    q_pos/k_pos args are accepted for API compatibility but positions are
+    derived from shapes (q is the causal suffix of k). Returns [B,Sq,H,D].
+    """
+    dw = jnp.zeros((), jnp.float32) if disable_window is None \
+        else disable_window.astype(jnp.float32)
+    fn = _make_flash(bool(causal), int(window), int(meta_tokens), int(chunk))
+    return fn(q, k, v, dw)
+
+
+def attention_reference(q, k, v, *, causal=True, window=0, meta_tokens=0,
+                        disable_window=None):
+    """Naive O(S^2)-memory oracle for tests."""
+    b, sq, h, d = q.shape
+    sk, n_kv = k.shape[1], k.shape[2]
+    qg = _group(q, n_kv).astype(jnp.float32) / (d ** 0.5)
+    kg = k.transpose(0, 2, 1, 3)[:, :, None].astype(jnp.float32)
+    vg = v.transpose(0, 2, 1, 3)[:, :, None].astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bkzsd->bkgqs", qg, kg)
+    q_pos = jnp.arange(sq) + (sk - sq if causal else 0)
+    dw = jnp.zeros((), jnp.float32) if disable_window is None \
+        else disable_window.astype(jnp.float32)
+    mask = _mask_block(q_pos, jnp.arange(sk), causal, window, meta_tokens,
+                       dw)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bkzsd->bkgqd", p, vg)
+    return _ungroup(out).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, *, k_pos, cur_pos, window=0,
+                     meta_tokens=0, disable_window=None):
+    """One-token decode: q [B, 1, H, D]; caches [B, Smax, KVH, D].
+
+    k_pos [Smax] holds the absolute position stored in each cache slot;
+    slots with position > cur_pos are masked out.
+    """
+    b, _, h, d = q.shape
+    n_kv = k_cache.shape[2]
+    g = h // n_kv
+    scale = 1.0 / (d ** 0.5)
+    qg = q.reshape(b, 1, n_kv, g, d).transpose(0, 2, 3, 1, 4)
+    qg = qg.astype(jnp.float32) * scale
+
+    s = jnp.einsum("bkgqd,bskd->bkgqs", qg, k_cache.astype(jnp.float32))
+    valid = k_pos <= cur_pos
+    if window and window > 0:
+        in_w = k_pos > cur_pos - window
+        if meta_tokens:
+            in_w |= k_pos < meta_tokens
+        if disable_window is not None:
+            in_w |= disable_window
+        valid &= in_w
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bkgqd", p, v_cache.astype(jnp.float32))
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, 1, h, d)
+    return out.astype(q.dtype)

@@ -1,0 +1,550 @@
+"""Model assembly: param init, full-sequence forward (train / prefill),
+and single-token decode for every assigned family.
+
+Families:
+  dense / vlm      pre-norm GQA attn + SwiGLU MLP          (llama-style)
+  moe              GQA attn + top-k MoE (optional dense-FFN prefix layers)
+  ssm              Mamba-2 SSD blocks (attention-free)
+  hybrid           parallel attn + SSD heads, mean-fused (Hymba), sliding
+                   window + meta tokens
+  audio            Whisper enc-dec: bidirectional encoder over frame
+                   embeddings (conv frontend stubbed), causal decoder with
+                   cross-attention
+
+Layer stacks are `lax.scan`-ned over stacked params (leaf shape [L, ...])
+with optional remat — compile time and activation memory are O(1) in depth.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.context import (
+    constrain_ff,
+    constrain_heads,
+    constrain_tokens,
+)
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.attention import attention, decode_attention
+from repro.models.layers import (
+    apply_rope,
+    dense_init,
+    embed_init,
+    rms_norm,
+    rope_cos_sin,
+    sinusoidal_embedding,
+)
+
+Params = Dict[str, Any]
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _init_attn(key, cfg: ModelConfig, dtype) -> Params:
+    d, h, kvh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h, hd), 0, dtype),
+        "wk": dense_init(ks[1], (d, kvh, hd), 0, dtype),
+        "wv": dense_init(ks[2], (d, kvh, hd), 0, dtype),
+        "wo": dense_init(ks[3], (h, hd, d), (0, 1), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), dtype)
+        p["bk"] = jnp.zeros((kvh, hd), dtype)
+        p["bv"] = jnp.zeros((kvh, hd), dtype)
+    return p
+
+
+def _init_mlp(key, cfg: ModelConfig, dtype) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.family == "audio":  # whisper: fc-gelu-fc
+        return {
+            "w_fc": dense_init(ks[0], (d, f), 0, dtype),
+            "b_fc": jnp.zeros((f,), dtype),
+            "w_out": dense_init(ks[1], (f, d), 0, dtype),
+            "b_out": jnp.zeros((d,), dtype),
+        }
+    return {
+        "w_gate": dense_init(ks[0], (d, f), 0, dtype),
+        "w_up": dense_init(ks[1], (d, f), 0, dtype),
+        "w_down": dense_init(ks[2], (f, d), 0, dtype),
+    }
+
+
+def _init_block(key, cfg: ModelConfig, kind: str, dtype) -> Params:
+    """kind: dense | moe | ssm | hybrid | decoder_x"""
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    p: Params = {}
+    if kind == "ssm":
+        p["ssm_in_norm"] = jnp.zeros((d,), dtype)
+        p["ssm"] = ssm_lib.init_ssm(ks[0], cfg, dtype)
+        return p
+    p["attn_norm"] = jnp.zeros((d,), dtype)
+    p["attn"] = _init_attn(ks[0], cfg, dtype)
+    if kind == "hybrid":
+        p["ssm"] = ssm_lib.init_ssm(ks[1], cfg, dtype)
+        p["attn_branch_norm"] = jnp.zeros((d,), dtype)
+        p["ssm_branch_norm"] = jnp.zeros((d,), dtype)
+    if kind == "decoder_x":
+        p["xattn_norm"] = jnp.zeros((d,), dtype)
+        p["xattn"] = _init_attn(ks[2], cfg, dtype)
+    p["mlp_norm"] = jnp.zeros((d,), dtype)
+    if kind == "moe":
+        p["moe"] = moe_lib.init_moe(ks[3], cfg, dtype)
+    else:
+        p["mlp"] = _init_mlp(ks[4], cfg, dtype)
+    return p
+
+
+def _block_kind(cfg: ModelConfig) -> str:
+    return {"ssm": "ssm", "hybrid": "hybrid", "moe": "moe",
+            "audio": "decoder_x"}.get(cfg.family, "dense")
+
+
+def _stacked_init(key, cfg: ModelConfig, n: int, kind: str, dtype) -> Params:
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: _init_block(k, cfg, kind, dtype))(keys)
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    dtype = _dtype(cfg)
+    ks = jax.random.split(key, 8)
+    v, d = cfg.vocab_padded, cfg.d_model
+    p: Params = {"tok_embed": embed_init(ks[0], (v, d), dtype)}
+
+    n_main = cfg.n_layers - cfg.n_dense_layers
+    p["blocks"] = _stacked_init(ks[1], cfg, n_main, _block_kind(cfg), dtype)
+    if cfg.n_dense_layers:
+        p["dense_blocks"] = _stacked_init(
+            ks[2], cfg, cfg.n_dense_layers, "dense", dtype)
+    if cfg.enc_layers:
+        keys = jax.random.split(ks[3], cfg.enc_layers)
+        p["encoder"] = jax.vmap(
+            lambda k: _init_block(k, cfg, "dense", dtype))(keys)
+        p["enc_norm"] = jnp.zeros((d,), dtype)
+    if cfg.meta_tokens:
+        p["meta_tokens"] = embed_init(ks[4], (cfg.meta_tokens, d), dtype)
+    p["final_norm"] = jnp.zeros((d,), dtype)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[5], (d, v), 0, dtype)
+    return p
+
+
+# --------------------------------------------------------------------------
+# block application (full sequence)
+# --------------------------------------------------------------------------
+
+def _project_qkv(p: Params, x, cfg: ModelConfig, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q, k, v = constrain_heads(q), constrain_heads(k), constrain_heads(v)
+    cos, sin = rope_cos_sin(positions, cfg.resolved_head_dim, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def _attn_full(p: Params, x, cfg: ModelConfig, positions, *, causal=True,
+               window=0, disable_window=None):
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    out = attention(q, k, v, q_pos=positions, k_pos=positions, causal=causal,
+                    window=window, meta_tokens=cfg.meta_tokens,
+                    disable_window=disable_window)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), (k, v)
+
+
+def _xattn_full(p: Params, x, enc_out, cfg: ModelConfig):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    out = attention(q, k, v, q_pos=jnp.arange(x.shape[1]),
+                    k_pos=jnp.arange(enc_out.shape[1]), causal=False)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), (k, v)
+
+
+def _mlp(p: Params, x, cfg: ModelConfig):
+    if cfg.family == "audio":
+        h = constrain_ff(x @ p["w_fc"] + p["b_fc"])
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+        return h @ p["w_out"] + p["b_out"]
+    g = constrain_ff(x @ p["w_gate"])
+    u = constrain_ff(x @ p["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return h @ p["w_down"]
+
+
+def _apply_block(p: Params, x, cfg: ModelConfig, positions, kind: str,
+                 is_global=None, enc_out=None, collect_cache=False):
+    """Full-sequence block. Returns (x, cache dict or None, aux loss)."""
+    cache = {}
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "ssm":
+        h = rms_norm(x, p["ssm_in_norm"], cfg.norm_eps)
+        if collect_cache:
+            y, st = ssm_lib.ssd_forward(p["ssm"], h, cfg, return_state=True)
+            cache.update(st)
+        else:
+            y = ssm_lib.ssd_forward(p["ssm"], h, cfg)
+        return x + y, (cache if collect_cache else None), aux
+
+    h = rms_norm(x, p["attn_norm"], cfg.norm_eps)
+    if kind == "hybrid":
+        attn_out, (k, v) = _attn_full(
+            p["attn"], h, cfg, positions, window=cfg.attn_window,
+            disable_window=is_global)
+        if collect_cache:
+            ssm_out, st = ssm_lib.ssd_forward(p["ssm"], h, cfg,
+                                              return_state=True)
+            cache.update(st)
+        else:
+            ssm_out = ssm_lib.ssd_forward(p["ssm"], h, cfg)
+        fused = 0.5 * (
+            rms_norm(attn_out, p["attn_branch_norm"], cfg.norm_eps)
+            + rms_norm(ssm_out, p["ssm_branch_norm"], cfg.norm_eps))
+        x = x + fused
+    else:
+        attn_out, (k, v) = _attn_full(p["attn"], h, cfg, positions)
+        x = x + attn_out
+    if collect_cache:
+        cache["k"], cache["v"] = k, v
+
+    if kind == "decoder_x" and enc_out is not None:
+        h = rms_norm(x, p["xattn_norm"], cfg.norm_eps)
+        xo, (xk, xv) = _xattn_full(p["xattn"], h, enc_out, cfg)
+        x = x + xo
+        if collect_cache:
+            cache["xk"], cache["xv"] = xk, xv
+
+    h = rms_norm(x, p["mlp_norm"], cfg.norm_eps)
+    if kind == "moe":
+        x = x + moe_lib.moe_forward(p["moe"], h, cfg)
+        aux = moe_lib.moe_aux_loss(p["moe"], h, cfg)
+    else:
+        x = x + _mlp(p["mlp"], h, cfg)
+    return constrain_tokens(x), (cache if collect_cache else None), aux
+
+
+def _scan_blocks(stacked: Params, x, cfg: ModelConfig, positions, kind: str,
+                 extras=None, enc_out=None, collect_cache=False):
+    """Scan the stacked layer params over the residual stream.
+
+    Returns (x, caches, aux_loss_sum).
+    """
+
+    def body(carry, xs):
+        x_c, aux_c = carry
+        p_l, ex = xs
+        y, cache, aux = _apply_block(p_l, x_c, cfg, positions, kind,
+                                     is_global=ex, enc_out=enc_out,
+                                     collect_cache=collect_cache)
+        return (y, aux_c + aux), cache
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    n = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+    if extras is None:
+        extras = jnp.zeros((n,), bool)
+
+    aux0 = jnp.zeros((), jnp.float32)
+    if cfg.scan_layers:
+        (x, aux), caches = jax.lax.scan(body, (x, aux0), (stacked, extras))
+        return x, caches, aux
+    caches = []
+    aux = aux0
+    for i in range(n):
+        p_l = jax.tree.map(lambda a: a[i], stacked)
+        (x, aux), c = body((x, aux), (p_l, extras[i]))
+        caches.append(c)
+    if collect_cache:
+        caches = jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+    return x, caches, aux
+
+
+# --------------------------------------------------------------------------
+# embedding / head
+# --------------------------------------------------------------------------
+
+def _embed(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array]):
+    """Token (+ modality stub, + meta token) embedding.
+
+    Returns (x [B, S', D], n_prefix) where n_prefix positions carry no loss.
+    """
+    tokens = batch["tokens"]
+    x = params["tok_embed"][tokens]
+    n_prefix = 0
+    if cfg.family == "vlm" and "vision_embeds" in batch:
+        ve = batch["vision_embeds"].astype(x.dtype)
+        x = jnp.concatenate([ve, x[:, cfg.vision_tokens:]], axis=1)
+    if cfg.meta_tokens:
+        meta = jnp.broadcast_to(
+            params["meta_tokens"][None],
+            (x.shape[0],) + params["meta_tokens"].shape)
+        x = jnp.concatenate([meta.astype(x.dtype), x], axis=1)
+        n_prefix = cfg.meta_tokens
+    return constrain_tokens(x), n_prefix
+
+
+def _logits(params: Params, cfg: ModelConfig, x):
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["tok_embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = constrain_ff((x @ head).astype(jnp.float32))  # vocab -> model
+    if cfg.vocab_padded != cfg.vocab_size:  # mask padded vocab entries
+        pad_mask = jnp.arange(cfg.vocab_padded) >= cfg.vocab_size
+        logits = jnp.where(pad_mask, -1e30, logits)
+    return logits
+
+
+def _encode(params: Params, cfg: ModelConfig, frames) -> jax.Array:
+    """Whisper encoder over precomputed frame embeddings [B, F, D]."""
+    pos = jnp.asarray(sinusoidal_embedding(frames.shape[1], cfg.d_model))
+    x = frames.astype(_dtype(cfg)) + pos.astype(_dtype(cfg))[None]
+    positions = jnp.arange(frames.shape[1])
+
+    def enc_block(carry, p_l):
+        h = rms_norm(carry, p_l["attn_norm"], cfg.norm_eps)
+        q, k, v = _project_qkv(p_l["attn"], h, cfg, positions)
+        out = attention(q, k, v, q_pos=positions, k_pos=positions,
+                        causal=False)
+        carry = carry + jnp.einsum("bshk,hkd->bsd", out, p_l["attn"]["wo"])
+        h = rms_norm(carry, p_l["mlp_norm"], cfg.norm_eps)
+        carry = carry + _mlp(p_l["mlp"], h, cfg)
+        return carry, None
+
+    fn = jax.checkpoint(enc_block) if cfg.remat else enc_block
+    x, _ = jax.lax.scan(fn, x, params["encoder"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _global_flags(cfg: ModelConfig, n: int) -> jax.Array:
+    flags = jnp.zeros((n,), bool)
+    if cfg.family == "hybrid" and cfg.global_layers:
+        flags = flags.at[jnp.array(cfg.global_layers)].set(True)
+    return flags
+
+
+# --------------------------------------------------------------------------
+# public entry points
+# --------------------------------------------------------------------------
+
+def forward(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig,
+            collect_cache: bool = False, return_aux: bool = False):
+    """Teacher-forced full-sequence forward -> logits [B, S, Vpad].
+
+    With collect_cache, also returns the stacked per-layer cache arrays
+    (k/v [L, B, S', KVH, hd]; ssm h/conv final states; whisper xk/xv).
+    With return_aux, also returns the summed MoE load-balance aux loss.
+    """
+    x, n_prefix = _embed(params, cfg, batch)
+    positions = jnp.arange(x.shape[1])
+
+    enc_out = None
+    if cfg.enc_layers:
+        enc_out = _encode(params, cfg, batch["frames"])
+
+    n_main = cfg.n_layers - cfg.n_dense_layers
+    extras = _global_flags(cfg, n_main)
+
+    caches = []
+    aux_total = jnp.zeros((), jnp.float32)
+    if "dense_blocks" in params:
+        x, c, aux = _scan_blocks(params["dense_blocks"], x, cfg, positions,
+                                 "dense", collect_cache=collect_cache)
+        caches.append(c)
+        aux_total += aux
+    x, c, aux = _scan_blocks(params["blocks"], x, cfg, positions,
+                             _block_kind(cfg), extras=extras, enc_out=enc_out,
+                             collect_cache=collect_cache)
+    caches.append(c)
+    aux_total += aux
+
+    logits = _logits(params, cfg, x)
+    if n_prefix:
+        logits = logits[:, n_prefix:]
+    out = (logits,)
+    if collect_cache:
+        out = out + (caches,)
+    if return_aux:
+        out = out + (aux_total,)
+    return out if len(out) > 1 else out[0]
+
+
+# ---------------------------------- caches --------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=None) -> Params:
+    """Decode cache pytree (slot i holds position i; hybrid adds meta slots)."""
+    dtype = dtype or _dtype(cfg)
+    hd = cfg.resolved_head_dim
+    total = max_len + cfg.meta_tokens
+    cache: Params = {}
+    kind = _block_kind(cfg)
+    n_main = cfg.n_layers - cfg.n_dense_layers
+    if kind != "ssm":
+        cache["k"] = jnp.zeros(
+            (cfg.n_layers, batch, total, cfg.n_kv_heads, hd), dtype)
+        cache["v"] = jnp.zeros_like(cache["k"])
+    if kind in ("ssm", "hybrid"):
+        shapes = ssm_lib.ssm_cache_shapes(cfg, batch)
+        n_ssm = n_main if kind == "ssm" else cfg.n_layers
+        cache["h"] = jnp.zeros((n_ssm,) + shapes["h"], jnp.float32)
+        cache["conv"] = jnp.zeros((n_ssm,) + shapes["conv"], dtype)
+    if cfg.enc_layers:
+        cache["xk"] = jnp.zeros(
+            (cfg.n_layers, batch, cfg.enc_frames, cfg.n_kv_heads, hd), dtype)
+        cache["xv"] = jnp.zeros_like(cache["xk"])
+    return cache
+
+
+def prefill(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig,
+            max_len: Optional[int] = None):
+    """Process a full prompt -> (logits, populated decode cache)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    max_len = max_len or s
+    logits, caches = forward(params, batch, cfg, collect_cache=True)
+    cache = init_cache(cfg, b, max_len)
+
+    stacked = caches[-1] if len(caches) == 1 else None
+    if len(caches) == 2:  # dense prefix + main (kimi)
+        stacked = {
+            "k": jnp.concatenate([caches[0]["k"], caches[1]["k"]], axis=0),
+            "v": jnp.concatenate([caches[0]["v"], caches[1]["v"]], axis=0),
+        }
+        for key in caches[1]:
+            if key not in ("k", "v"):
+                stacked[key] = caches[1][key]
+
+    total_prefill = s + cfg.meta_tokens  # cache rows written by the forward
+    for key in ("k", "v", "xk", "xv"):
+        if key in cache and key in stacked:
+            cache[key] = jax.lax.dynamic_update_slice_in_dim(
+                cache[key], stacked[key].astype(cache[key].dtype),
+                0, axis=2)
+    for key in ("h", "conv"):
+        if key in cache and key in stacked:
+            cache[key] = stacked[key].astype(cache[key].dtype)
+    return logits, cache
+
+
+def _decode_block(p: Params, x, cache_l, cur_pos, cfg: ModelConfig,
+                  kind: str, is_global=None):
+    """One-token block step. cache_l: per-layer cache slice dict."""
+    new_cache = dict(cache_l)
+    if kind == "ssm":
+        h = rms_norm(x, p["ssm_in_norm"], cfg.norm_eps)
+        y, sc = ssm_lib.ssd_decode_step(
+            p["ssm"], h, {"h": cache_l["h"], "conv": cache_l["conv"]}, cfg)
+        new_cache.update(sc)
+        return x + y, new_cache
+
+    h = rms_norm(x, p["attn_norm"], cfg.norm_eps)
+    pos = cur_pos + cfg.meta_tokens  # meta tokens occupy leading slots
+    q, k, v = _project_qkv(p["attn"], h, cfg, jnp.atleast_1d(pos))
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache_l["k"], k.astype(cache_l["k"].dtype), pos, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache_l["v"], v.astype(cache_l["v"].dtype), pos, axis=1)
+    new_cache["k"], new_cache["v"] = k_cache, v_cache
+    slot_pos = jnp.arange(k_cache.shape[1])
+
+    if kind == "hybrid":
+        a = decode_attention(q, k_cache, v_cache, k_pos=slot_pos,
+                             cur_pos=pos, window=cfg.attn_window,
+                             meta_tokens=cfg.meta_tokens,
+                             disable_window=is_global)
+        attn_out = jnp.einsum("bshk,hkd->bsd", a, p["attn"]["wo"])
+        y, sc = ssm_lib.ssd_decode_step(
+            p["ssm"], h, {"h": cache_l["h"], "conv": cache_l["conv"]}, cfg)
+        new_cache["h"], new_cache["conv"] = sc["h"], sc["conv"]
+        fused = 0.5 * (rms_norm(attn_out, p["attn_branch_norm"], cfg.norm_eps)
+                       + rms_norm(y, p["ssm_branch_norm"], cfg.norm_eps))
+        x = x + fused
+    else:
+        a = decode_attention(q, k_cache, v_cache, k_pos=slot_pos, cur_pos=pos)
+        x = x + jnp.einsum("bshk,hkd->bsd", a, p["attn"]["wo"])
+
+    if kind == "decoder_x":
+        h = rms_norm(x, p["xattn_norm"], cfg.norm_eps)
+        qx = jnp.einsum("bsd,dhk->bshk", h, p["xattn"]["wq"])
+        if "bq" in p["xattn"]:
+            qx = qx + p["xattn"]["bq"]
+        enc_len = cache_l["xk"].shape[1]
+        a = decode_attention(qx, cache_l["xk"], cache_l["xv"],
+                             k_pos=jnp.arange(enc_len),
+                             cur_pos=jnp.asarray(enc_len, jnp.int32))
+        x = x + jnp.einsum("bshk,hkd->bsd", a, p["xattn"]["wo"])
+
+    h = rms_norm(x, p["mlp_norm"], cfg.norm_eps)
+    if kind == "moe":
+        x = x + moe_lib.moe_forward(p["moe"], h, cfg)
+    else:
+        x = x + _mlp(p["mlp"], h, cfg)
+    return x, new_cache
+
+
+def decode_step(params: Params, tokens, cache: Params, cur_pos,
+                cfg: ModelConfig) -> Tuple[jax.Array, Params]:
+    """tokens [B, 1] int32; cur_pos scalar int32 (position of this token).
+
+    Returns (logits [B, 1, Vpad], new_cache).
+    """
+    x = params["tok_embed"][tokens]
+    cur_pos = jnp.asarray(cur_pos, jnp.int32)
+    n_dense = cfg.n_dense_layers
+    extras = _global_flags(cfg, cfg.n_layers - n_dense)
+
+    def run_stack(x, stacked, cache_stack, kind, ex):
+        def body(carry, xs):
+            p_l, c_l, e_l = xs
+            y, nc = _decode_block(p_l, carry, c_l, cur_pos, cfg, kind, e_l)
+            return y, nc
+
+        return jax.lax.scan(body, x, (stacked, cache_stack, ex))
+
+    new_cache: Params = {}
+    if n_dense:
+        dense_kv = {k: cache[k][:n_dense] for k in ("k", "v")}
+        x, nc_dense = run_stack(x, params["dense_blocks"], dense_kv, "dense",
+                                jnp.zeros((n_dense,), bool))
+        main_cache = {k: cache[k][n_dense:] for k in ("k", "v")}
+    else:
+        main_cache = {k: cache[k] for k in ("k", "v") if k in cache}
+    for key in ("h", "conv", "xk", "xv"):
+        if key in cache:
+            main_cache[key] = cache[key]
+
+    x, nc_main = run_stack(x, params["blocks"], main_cache,
+                           _block_kind(cfg), extras)
+
+    if n_dense:
+        new_cache["k"] = jnp.concatenate([nc_dense["k"], nc_main["k"]], 0)
+        new_cache["v"] = jnp.concatenate([nc_dense["v"], nc_main["v"]], 0)
+        for key in nc_main:
+            if key not in ("k", "v"):
+                new_cache[key] = nc_main[key]
+    else:
+        new_cache = nc_main
+
+    logits = _logits(params, cfg, x)
+    return logits, new_cache

@@ -1,0 +1,206 @@
+"""Mamba-2 SSD (state-space duality) block: chunked training path and O(1)
+recurrent decode path. Follows arXiv:2405.21060 §6 (block decomposition:
+intra-chunk quadratic + inter-chunk state recurrence).
+
+Layout: d_inner = expand * d_model; H = d_inner / head_dim SSD heads;
+single B/C group (n_groups=1), state size N = cfg.ssm_state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm
+
+
+def ssm_param_shapes(cfg):
+    d, di, n, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = di + 2 * n
+    return {
+        "in_proj": (d, 2 * di + 2 * n + nh),   # z, x, B, C, dt
+        "conv_w": (cfg.ssm_conv, conv_dim),
+        "conv_b": (conv_dim,),
+        "A_log": (nh,),
+        "D": (nh,),
+        "dt_bias": (nh,),
+        "ssm_norm": (di,),
+        "out_proj": (di, d),
+    }
+
+
+def init_ssm(key, cfg, dtype):
+    shapes = ssm_param_shapes(cfg)
+    keys = jax.random.split(key, len(shapes))
+    p = {}
+    for k, (name, shape) in zip(keys, shapes.items()):
+        if name == "A_log":
+            # A in [1, 16) as in mamba-2 reference init
+            p[name] = jnp.log(
+                jax.random.uniform(k, shape, jnp.float32, 1.0, 16.0))
+        elif name == "dt_bias":
+            # softplus^-1 of dt ~ U[1e-3, 1e-1]
+            dt = jax.random.uniform(k, shape, jnp.float32, 1e-3, 1e-1)
+            p[name] = dt + jnp.log(-jnp.expm1(-dt))
+        elif name == "D":
+            p[name] = jnp.ones(shape, jnp.float32)
+        elif name in ("conv_b", "ssm_norm"):
+            p[name] = jnp.zeros(shape, dtype)
+        else:
+            p[name] = dense_init(k, shape, in_axis=0, dtype=dtype)
+    return p
+
+
+def _split_proj(proj, cfg):
+    di, n, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :di]
+    xbc = proj[..., di:di + di + 2 * n]
+    dt = proj[..., di + di + 2 * n:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv_w, conv_b):
+    """Depthwise causal conv along seq. xbc [B,S,C], conv_w [K,C]."""
+    k = conv_w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc, dtype=jnp.float32)
+    for i in range(k):  # K=4: unrolled taps beat lax.conv on TPU for DW-conv
+        out = out + pad[:, i:i + xbc.shape[1], :].astype(jnp.float32) \
+            * conv_w[i].astype(jnp.float32)
+    out = out + conv_b.astype(jnp.float32)
+    return jax.nn.silu(out).astype(xbc.dtype)
+
+
+def ssd_forward(params, x, cfg, return_state=False):
+    """Full-sequence SSD. x [B, S, D] -> [B, S, D].
+
+    With ``return_state`` also returns {"h": final recurrent state,
+    "conv": last (K-1) conv inputs} for decode continuation.
+    """
+    b, s0, _ = x.shape
+    di, n, nh, p_dim = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    q = min(cfg.ssm_chunk, s0)
+    pad = (-s0) % q
+    s = s0 + pad
+    nc = s // q
+
+    proj = x @ params["in_proj"]
+    z, xbc_raw, dt_raw = _split_proj(proj, cfg)
+    xbc = _causal_conv(xbc_raw, params["conv_w"], params["conv_b"])
+    if pad:  # pad tail; dt is zeroed there so state/outputs are unaffected
+        xbc = jnp.pad(xbc, ((0, 0), (0, pad), (0, 0)))
+        dt_raw = jnp.pad(dt_raw, ((0, 0), (0, pad), (0, 0)))
+    xs = xbc[..., :di].reshape(b, s, nh, p_dim)
+    B = xbc[..., di:di + n]                      # [B,S,N] (single group)
+    C = xbc[..., di + n:]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # [B,S,H]
+    if pad:
+        dt = dt * (jnp.arange(s) < s0).astype(jnp.float32)[None, :, None]
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))              # [H]
+    dA = dt * A                                                    # [B,S,H]
+
+    # chunk views
+    xs_c = xs.reshape(b, nc, q, nh, p_dim).astype(jnp.float32)
+    B_c = B.reshape(b, nc, q, n).astype(jnp.float32)
+    C_c = C.reshape(b, nc, q, n).astype(jnp.float32)
+    dt_c = dt.reshape(b, nc, q, nh)
+    dA_c = dA.reshape(b, nc, q, nh)
+    cum = jnp.cumsum(dA_c, axis=2)                                 # [B,Nc,Q,H]
+
+    # ---- intra-chunk (quadratic within chunk) -------------------------
+    # L[i,j] = exp(cum[i] - cum[j]) for i >= j. The mask must clamp the
+    # EXPONENT (not the exponential): exp of the masked upper triangle is
+    # +inf-scale and its cotangent is inf*0=NaN (hit at train step 2 on
+    # mamba2; tests/test_train_loop.py::test_mamba_trains_stably).
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]           # [B,Nc,Q,Q,H]
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    diff = jnp.where(tri[None, None, :, :, None], diff, -1e30)
+    L = jnp.exp(diff)
+    cb = jnp.einsum("bcin,bcjn->bcij", C_c, B_c)                   # [B,Nc,Q,Q]
+    w = cb[..., None] * L * dt_c[:, :, None, :, :]                 # [B,Nc,Q,Q,H]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w, xs_c)
+
+    # ---- chunk states + inter-chunk recurrence ------------------------
+    seg = jnp.exp(cum[:, :, -1:, :] - cum)                         # [B,Nc,Q,H]
+    states = jnp.einsum("bcqh,bcqn,bcqhp->bchpn",
+                        seg * dt_c, B_c, xs_c)                     # [B,Nc,H,P,N]
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                        # [B,Nc,H]
+
+    def scan_fn(h, inp):
+        st, dec = inp
+        h_next = h * dec[:, :, None, None] + st
+        return h_next, h                      # emit state *entering* chunk
+
+    h0 = jnp.zeros((b, nh, p_dim, n), jnp.float32)
+    h_final, h_prev = jax.lax.scan(
+        scan_fn, h0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)                       # [B,Nc,H,P,N]
+
+    y_inter = jnp.einsum("bcqn,bcqh,bchpn->bcqhp",
+                         C_c, jnp.exp(cum), h_prev)
+
+    y = y_intra + y_inter + params["D"].astype(jnp.float32)[None, None, None, :, None] * xs_c
+    y = y.reshape(b, s, di)[:, :s0]
+
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(y.astype(x.dtype), params["ssm_norm"], cfg.norm_eps)
+    out = y @ params["out_proj"]
+    if return_state:
+        k = cfg.ssm_conv
+        state = {"h": h_final,
+                 "conv": xbc_raw[:, -(k - 1):, :] if s0 >= k - 1 else
+                 jnp.pad(xbc_raw, ((0, 0), (k - 1 - s0, 0), (0, 0)))}
+        return out, state
+    return out
+
+
+def ssm_cache_shapes(cfg, batch):
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "h": (batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+        "conv": (batch, cfg.ssm_conv - 1, conv_dim),
+    }
+
+
+def ssd_decode_step(params, x, cache, cfg):
+    """One-token recurrent update. x [B, 1, D]; cache dict per ssm_cache_shapes.
+
+    Returns (y [B, 1, D], new_cache).
+    """
+    b = x.shape[0]
+    di, n, nh, p_dim = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+
+    proj = x[:, 0] @ params["in_proj"]                   # [B, ...]
+    z, xbc, dt_raw = _split_proj(proj, cfg)
+
+    # conv with cache: window = [cache ; xbc]
+    win = jnp.concatenate([cache["conv"], xbc[:, None, :]], axis=1)  # [B,K,C]
+    conv_out = jnp.einsum("bkc,kc->bc", win.astype(jnp.float32),
+                          params["conv_w"].astype(jnp.float32))
+    conv_out = jax.nn.silu(conv_out + params["conv_b"].astype(jnp.float32))
+    new_conv = win[:, 1:, :].astype(cache["conv"].dtype)
+
+    xs = conv_out[..., :di].reshape(b, nh, p_dim)
+    B = conv_out[..., di:di + n]
+    C = conv_out[..., di + n:]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # [B,H]
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * A)                                        # [B,H]
+
+    h = cache["h"].astype(jnp.float32)
+    h_new = h * decay[:, :, None, None] \
+        + jnp.einsum("bh,bn,bhp->bhpn", dt, B, xs)
+    y = jnp.einsum("bn,bhpn->bhp", C, h_new) \
+        + params["D"].astype(jnp.float32)[None, :, None] * xs
+    y = y.reshape(b, di)
+
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(y.astype(x.dtype)[:, None, :], params["ssm_norm"],
+                 cfg.norm_eps)[:, 0]
+    y = y @ params["out_proj"]
+    return y[:, None, :], {"h": h_new.astype(cache["h"].dtype),
+                           "conv": new_conv}

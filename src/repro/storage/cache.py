@@ -1,0 +1,50 @@
+"""Partition cache for the serving tier (beyond-paper extension).
+
+The paper (§V-B) leaves caching as future work, noting that DSANN's
+partition access pattern is hard to predict so "the effectiveness of
+caching is significantly constrained". This LRU byte-bounded cache lets us
+QUANTIFY that remark: benchmarks/cache_effect.py measures hit rate and QPS
+across workload skews — confirming the paper's intuition for uniform
+workloads and showing where skewed (production-like) workloads break it.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Optional
+
+import numpy as np
+
+
+class PartitionCache:
+    def __init__(self, capacity_bytes: int):
+        self.capacity = capacity_bytes
+        self._data: "collections.OrderedDict[str, np.ndarray]" = \
+            collections.OrderedDict()
+        self._bytes = 0
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key: str) -> Optional[np.ndarray]:
+        if key in self._data:
+            self._data.move_to_end(key)
+            self.hits += 1
+            return self._data[key]
+        self.misses += 1
+        return None
+
+    def put(self, key: str, value: np.ndarray):
+        if value.nbytes > self.capacity:
+            return
+        if key in self._data:
+            self._data.move_to_end(key)
+            return
+        self._data[key] = value
+        self._bytes += value.nbytes
+        while self._bytes > self.capacity and self._data:
+            _, evicted = self._data.popitem(last=False)
+            self._bytes -= evicted.nbytes
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0

@@ -1,0 +1,164 @@
+"""Distributed-storage simulation layer.
+
+The container is CPU-only, so storage *timing* is simulated while all
+*data* operations are real (fetched bytes are the actual residual vectors;
+recall is exact). Latency model per GET:
+
+    latency = base + size/bandwidth + LogNormal(mu, sigma)
+
+with parameters for the paper's Table I tiers:
+    mem   0                             (in-memory baseline)
+    ssd   ~100 us                       (local SSD)
+    dfs   0.1–10 ms heavy-tailed        (Pangu-like DFS)
+
+Also provides: failure injection (dead shards -> KeyError, the router
+degrades gracefully), hedged requests (straggler mitigation: duplicate
+issue at the p95 timeout, take the min — the classic tail-taming trick),
+and an event-clock used by the async search to overlap compute with I/O.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class StorageConfig:
+    kind: str = "dfs"            # mem | ssd | dfs
+    base_latency_s: float = 0.0
+    bandwidth_Bps: float = 0.0
+    jitter_mu: float = 0.0       # of the lognormal additive term
+    jitter_sigma: float = 0.0
+    seed: int = 0
+
+    @staticmethod
+    def preset(kind: str, seed: int = 0) -> "StorageConfig":
+        if kind == "mem":
+            return StorageConfig("mem", 0.0, float("inf"), 0.0, 0.0, seed)
+        if kind == "ssd":
+            return StorageConfig("ssd", 80e-6, 2e9, np.log(20e-6), 0.6,
+                                 seed)
+        if kind == "dfs":
+            # Pangu-like: 0.1-10 ms (paper Table I); heavy lognormal tail
+            return StorageConfig("dfs", 300e-6, 1e9, np.log(700e-6), 1.0,
+                                 seed)
+        raise ValueError(kind)
+
+
+class ObjectStore:
+    """Key -> numpy array object store with simulated latencies."""
+
+    def __init__(self, cfg: StorageConfig):
+        self.cfg = cfg
+        self._data: Dict[str, np.ndarray] = {}
+        self._rng = np.random.default_rng(cfg.seed)
+        self._dead_prefixes: List[str] = []
+        self.n_gets = 0
+        self.bytes_fetched = 0
+
+    # ------------------------------------------------------------- admin
+    def put(self, key: str, value: np.ndarray):
+        self._data[key] = np.ascontiguousarray(value)
+
+    def keys(self):
+        return self._data.keys()
+
+    def kill_prefix(self, prefix: str):
+        """Failure injection: all keys under prefix become unavailable."""
+        self._dead_prefixes.append(prefix)
+
+    def revive_all(self):
+        self._dead_prefixes = []
+
+    def total_bytes(self) -> int:
+        return sum(v.nbytes for v in self._data.values())
+
+    # ------------------------------------------------------------ access
+    def _latency(self, nbytes: int) -> float:
+        c = self.cfg
+        lat = c.base_latency_s
+        if np.isfinite(c.bandwidth_Bps) and c.bandwidth_Bps > 0:
+            lat += nbytes / c.bandwidth_Bps
+        if c.jitter_sigma > 0:
+            lat += self._rng.lognormal(c.jitter_mu, c.jitter_sigma)
+        return lat
+
+    def get(self, key: str) -> Tuple[np.ndarray, float]:
+        """Returns (value, simulated_latency_seconds)."""
+        for p in self._dead_prefixes:
+            if key.startswith(p):
+                raise KeyError(f"shard down: {key}")
+        v = self._data[key]
+        self.n_gets += 1
+        self.bytes_fetched += v.nbytes
+        return v, self._latency(v.nbytes)
+
+    def get_hedged(self, key: str, hedge_after_s: float) -> Tuple[
+            np.ndarray, float]:
+        """Straggler mitigation: duplicate request after hedge_after_s."""
+        v, lat1 = self.get(key)
+        if lat1 <= hedge_after_s:
+            return v, lat1
+        lat2 = hedge_after_s + self._latency(v.nbytes)
+        return v, min(lat1, lat2)
+
+
+@dataclasses.dataclass
+class ComputeModel:
+    """Per-query compute-time model for the simulated QPS numbers.
+
+    seconds = flops * sec_per_flop (+ per-hop / per-partition overheads).
+    Calibrated against single-thread CPU throughput so in-memory simulated
+    QPS matches measured QPS within a small factor (see benchmarks).
+    """
+    sec_per_flop: float = 2.5e-10     # ~4 Gflop/s effective single thread
+    hop_overhead_s: float = 2e-6
+    partition_overhead_s: float = 1e-6
+
+    def search_hop(self, n_dists: int, d: int) -> float:
+        return 3 * n_dists * d * self.sec_per_flop + self.hop_overhead_s
+
+    def scan(self, n_points: int, d: int) -> float:
+        return 3 * n_points * d * self.sec_per_flop \
+            + self.partition_overhead_s
+
+
+@dataclasses.dataclass
+class FetchRecord:
+    issue_s: float      # compute-cursor time the GET was issued (async)
+    latency_s: float    # simulated storage latency
+    scan_cost_s: float  # full-scan compute once the partition arrives
+
+
+@dataclasses.dataclass
+class QueryTimeline:
+    """Event-clock for one query: a single compute thread (traversal then
+    scans) overlapped with asynchronous storage fetches (Alg 5)."""
+    compute_s: float = 0.0          # traversal compute consumed so far
+    fetches: List[FetchRecord] = dataclasses.field(default_factory=list)
+
+    def add_compute(self, dt: float):
+        self.compute_s += dt
+
+    def issue_io(self, latency: float, scan_cost: float):
+        self.fetches.append(FetchRecord(self.compute_s, latency, scan_cost))
+
+    def finish_async(self) -> float:
+        """Alg 5: fetch issued mid-traversal at its issue time; scans run
+        on the compute thread as data arrives (after traversal ends)."""
+        t = self.compute_s
+        arrivals = sorted((f.issue_s + f.latency_s, f.scan_cost_s)
+                          for f in self.fetches)
+        for ready, cost in arrivals:
+            t = max(t, ready) + cost
+        return t
+
+    def finish_sync(self) -> float:
+        """Blocking baseline: all fetches issued only after traversal
+        completes, awaited together; scans back-to-back afterwards."""
+        if not self.fetches:
+            return self.compute_s
+        start = self.compute_s + max(f.latency_s for f in self.fetches)
+        return start + sum(f.scan_cost_s for f in self.fetches)

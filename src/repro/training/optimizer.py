@@ -1,0 +1,132 @@
+"""Optimizers implemented in-house (no optax in the container).
+
+AdamW with:
+  * configurable state dtype (fp32 default; bf16 for memory-bound 1T-class
+    models — see EXPERIMENTS.md memory table),
+  * optional Adafactor-style factored second moment (row/col statistics on
+    the trailing two dims; leading stacked-layer dims are preserved), which
+    drops optimizer memory from 2x to ~1x params + O(sum of dims),
+  * global-norm gradient clipping,
+  * linear warmup + cosine decay schedule.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    state_dtype: str = "float32"
+    factored: bool = False           # Adafactor-style factored 2nd moment
+    min_dim_size_to_factor: int = 128
+
+
+def schedule(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def _factorable(shape, cfg: OptimizerConfig) -> bool:
+    return (len(shape) >= 2 and shape[-1] >= cfg.min_dim_size_to_factor
+            and shape[-2] >= cfg.min_dim_size_to_factor)
+
+
+def init_state(params, cfg: OptimizerConfig) -> Dict[str, Any]:
+    dt = jnp.dtype(cfg.state_dtype)
+
+    def init_m(p):
+        return jnp.zeros(p.shape, dt)
+
+    def init_v(p):
+        if cfg.factored and _factorable(p.shape, cfg):
+            return {
+                "row": jnp.zeros(p.shape[:-1], dt),
+                "col": jnp.zeros(p.shape[:-2] + p.shape[-1:], dt),
+            }
+        return jnp.zeros(p.shape, dt)
+
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(init_m, params),
+        "v": jax.tree.map(init_v, params, is_leaf=lambda x: hasattr(x, "shape")),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def _is_v_leaf(x):
+    return isinstance(x, dict) and "row" in x or hasattr(x, "shape")
+
+
+def apply_updates(params, grads, state, cfg: OptimizerConfig):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.clip_norm else 1.0
+
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+    dt = jnp.dtype(cfg.state_dtype)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m_new = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        if isinstance(v, dict):  # factored
+            g2 = jnp.square(g) + 1e-30
+            row = cfg.b2 * v["row"].astype(jnp.float32) \
+                + (1 - cfg.b2) * jnp.mean(g2, axis=-1)
+            col = cfg.b2 * v["col"].astype(jnp.float32) \
+                + (1 - cfg.b2) * jnp.mean(g2, axis=-2)
+            # reconstruct: v ~ row x col / mean(row)
+            denom = jnp.maximum(jnp.mean(row, axis=-1, keepdims=True), 1e-30)
+            v_hat = (row / denom)[..., None] * col[..., None, :]
+            v_new = {"row": row.astype(dt), "col": col.astype(dt)}
+        else:
+            v_hat = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * jnp.square(g)
+            v_new = v_hat.astype(dt)
+            v_hat_full = v_hat
+        v_corr = (v_hat if isinstance(v, dict) else v_hat_full) / b2c
+        m_corr = m_new / b1c
+        delta = m_corr / (jnp.sqrt(v_corr) + cfg.eps)
+        if cfg.weight_decay and p.ndim >= 2:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return p_new, m_new.astype(dt), v_new
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+
+    out = [upd(p, g, m, v)
+           for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+
+    new_state = {"step": step, "m": new_m, "v": new_v}
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, new_state, metrics

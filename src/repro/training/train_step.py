@@ -1,0 +1,110 @@
+"""Training step: loss, grads, microbatch accumulation, optimizer update.
+
+The returned step function is pure (params, opt_state, batch) ->
+(params, opt_state, metrics); distribution comes entirely from the jit
+in/out shardings built in launch/ (GSPMD handles DP grad all-reduces,
+FSDP weight all-gathers and TP collectives).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import forward
+from repro.training.optimizer import OptimizerConfig, apply_updates
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1            # gradient accumulation steps
+    aux_loss_weight: float = 0.01    # MoE load-balance loss
+    z_loss_weight: float = 1e-4      # logit z-loss (stability)
+    grad_accum_dtype: str = "float32"  # bf16 for memory-bound 1T models
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  vocab_size: int, z_loss_weight: float = 0.0):
+    """logits [B, S, Vpad] f32; labels [B, S] int32 (-1 = ignore)."""
+    mask = (labels >= 0).astype(jnp.float32)
+    labels = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(nll) / denom
+    if z_loss_weight:
+        loss = loss + z_loss_weight * jnp.sum(jnp.square(logz) * mask) / denom
+    return loss
+
+
+def loss_fn(params, batch: Dict[str, jax.Array], cfg: ModelConfig,
+            tcfg: TrainConfig):
+    logits, aux = forward(params, batch, cfg, return_aux=True)
+    loss = cross_entropy(logits, batch["labels"], cfg.vocab_padded,
+                         tcfg.z_loss_weight)
+    total = loss + tcfg.aux_loss_weight * aux
+    return total, {"loss": loss, "aux_loss": aux}
+
+
+def _split_microbatches(batch, n):
+    from repro.distributed.context import get_mesh
+    from repro.distributed.sharding import _dp_entry, constrain
+    from jax.sharding import PartitionSpec as P
+
+    mesh, _ = get_mesh()
+
+    def split(x):
+        b = x.shape[0]
+        assert b % n == 0, f"batch {b} % microbatches {n} != 0"
+        y = x.reshape(n, b // n, *x.shape[1:])
+        if mesh is not None:  # keep per-microbatch batch dim data-sharded
+            entries = [None, _dp_entry(mesh, b // n)] \
+                + [None] * (y.ndim - 2)
+            y = constrain(y, mesh, P(*entries))
+        return y
+
+    return jax.tree.map(split, batch)
+
+
+def make_train_step(cfg: ModelConfig, ocfg: OptimizerConfig,
+                    tcfg: Optional[TrainConfig] = None):
+    tcfg = tcfg or TrainConfig()
+
+    def grads_of(params, mb):
+        (total, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, mb, cfg, tcfg)
+        return grads, total, metrics
+
+    def train_step(params, opt_state, batch):
+        if tcfg.microbatches > 1:
+            mbs = _split_microbatches(batch, tcfg.microbatches)
+            acc_dt = jnp.dtype(tcfg.grad_accum_dtype)
+
+            def acc_fn(carry, mb):
+                g_acc, t_acc = carry
+                g, total, _ = grads_of(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(acc_dt), g_acc, g)
+                return (g_acc, t_acc + total), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params)
+            (g_sum, total), _ = jax.lax.scan(acc_fn, (g0, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / tcfg.microbatches, g_sum)
+            total = total / tcfg.microbatches
+            metrics = {"loss": total, "aux_loss": jnp.zeros(())}
+        else:
+            grads, total, metrics = grads_of(params, batch)
+
+        params, opt_state, opt_metrics = apply_updates(
+            params, grads, opt_state, ocfg)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["total_loss"] = total
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,34 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
+see the real single CPU device; only launch/dryrun.py forces 512."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def small_ds():
+    from repro.data.vectors import make_dataset
+    return make_dataset("clustered", n=6000, d=32, n_queries=100,
+                        k_gt=50, seed=0)
+
+
+@pytest.fixture(scope="session")
+def uniform_ds():
+    from repro.data.vectors import make_dataset
+    return make_dataset("uniform", n=4000, d=24, n_queries=50,
+                        k_gt=20, seed=1)
+
+
+@pytest.fixture(scope="session")
+def built_pag(small_ds):
+    from repro.core.pag import build_pag
+    return build_pag(small_ds.base, p=0.2, k=8, lam=3.0, redundancy=4,
+                     seed=0)
+
+
+@pytest.fixture(scope="session")
+def pag_store(built_pag, small_ds):
+    from repro.core.search import write_partitions
+    from repro.storage.simulator import ObjectStore, StorageConfig
+    store = ObjectStore(StorageConfig.preset("mem"))
+    write_partitions(built_pag, small_ds.base, store, n_shards=4)
+    return store

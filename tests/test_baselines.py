@@ -1,0 +1,56 @@
+"""Baseline sanity: each paper-comparison system reaches reasonable recall
+and exhibits its expected storage behavior."""
+import numpy as np
+import pytest
+
+from repro.baselines.diskann import build_diskann, search_diskann
+from repro.baselines.hnsw import build_hnsw, search_hnsw
+from repro.baselines.spann import build_spann, search_spann
+from repro.data.vectors import recall_at_k
+from repro.storage.simulator import ObjectStore, StorageConfig
+
+
+@pytest.fixture(scope="module")
+def diskann(uniform_ds):
+    store = ObjectStore(StorageConfig.preset("mem"))
+    idx = build_diskann(uniform_ds.base, store, R=16, L=32, M=8)
+    return idx, store
+
+
+def test_diskann_recall(diskann, uniform_ds):
+    idx, store = diskann
+    ids, _, _ = search_diskann(idx, uniform_ds.queries, store, k=10, L=32)
+    rec = recall_at_k(ids, uniform_ds.gt_ids, 10)
+    assert rec >= 0.8, rec
+
+
+def test_diskann_dfs_latency_much_worse(uniform_ds, diskann):
+    """Per-hop blocking I/O: DFS latency >> mem latency (paper Fig 1a)."""
+    idx, mem_store = diskann
+    dfs_store = ObjectStore(StorageConfig.preset("dfs"))
+    # reuse same objects
+    for key in mem_store.keys():
+        dfs_store.put(key, mem_store._data[key])
+    _, _, lat_mem = search_diskann(idx, uniform_ds.queries[:20],
+                                   mem_store, k=10, L=32)
+    _, _, lat_dfs = search_diskann(idx, uniform_ds.queries[:20],
+                                   dfs_store, k=10, L=32)
+    assert np.mean(lat_dfs) > 5 * np.mean(lat_mem)
+
+
+def test_spann_recall(uniform_ds):
+    store = ObjectStore(StorageConfig.preset("mem"))
+    idx = build_spann(uniform_ds.base, store, points_per_part=16)
+    ids, _, _ = search_spann(idx, uniform_ds.queries, store, k=10,
+                             L=32, n_probe_max=32)
+    rec = recall_at_k(ids, uniform_ds.gt_ids, 10)
+    assert rec >= 0.8, rec
+    assert 1.0 <= idx.build_stats["replication"] <= 8.0
+
+
+def test_hnsw_recall(uniform_ds):
+    idx = build_hnsw(uniform_ds.base, R=16, L=32)
+    ids, _, _ = search_hnsw(idx, uniform_ds.queries, k=10, L=64)
+    rec = recall_at_k(ids, uniform_ds.gt_ids, 10)
+    assert rec >= 0.85, rec
+    assert idx.build_stats["n_levels"] >= 2

@@ -1,0 +1,66 @@
+"""Beyond-paper extensions: partition cache correctness + elastic
+re-sharding of the serving tier."""
+import numpy as np
+
+from repro.core.distributed import ShardedServing
+from repro.core.search import SearchConfig, search_pag, write_partitions
+from repro.data.vectors import recall_at_k
+from repro.storage.cache import PartitionCache
+from repro.storage.simulator import ObjectStore, StorageConfig
+
+
+def test_cache_preserves_results(built_pag, small_ds):
+    store = ObjectStore(StorageConfig.preset("dfs", seed=3))
+    write_partitions(built_pag, small_ds.base, store, n_shards=4)
+    q = small_ds.queries[np.arange(50).repeat(2)]  # guaranteed repeats
+    base_cfg = SearchConfig(L=64, k=10, n_probe_max=32)
+    ids0, d0, _ = search_pag(built_pag, small_ds.d, q, store, base_cfg,
+                             n_shards=4)
+    cache = PartitionCache(10**8)
+    cfg = SearchConfig(L=64, k=10, n_probe_max=32, cache=cache)
+    ids1, d1, st = search_pag(built_pag, small_ds.d, q, store, cfg,
+                              n_shards=4)
+    assert np.array_equal(ids0, ids1)
+    assert cache.hit_rate > 0.3  # repeated queries re-probe partitions
+
+
+def test_cache_lru_eviction():
+    c = PartitionCache(capacity_bytes=100)
+    a = np.zeros(10, np.float32)   # 40 bytes
+    c.put("a", a)
+    c.put("b", a)
+    assert c.get("a") is not None  # a is now most-recent
+    c.put("c", a)                  # evicts b (LRU)
+    assert c.get("b") is None
+    assert c.get("a") is not None and c.get("c") is not None
+
+
+def test_cache_respects_capacity():
+    c = PartitionCache(capacity_bytes=100)
+    c.put("big", np.zeros(1000, np.float32))  # > capacity: rejected
+    assert c.get("big") is None
+
+
+def test_elastic_rebalance(built_pag, small_ds):
+    store = ObjectStore(StorageConfig.preset("mem"))
+    write_partitions(built_pag, small_ds.base, store, n_shards=4)
+    srv = ShardedServing(pag=built_pag, store=store, n_shards=4,
+                         dim=small_ds.d)
+    cfg = SearchConfig(L=64, k=10, n_probe_max=48)
+    ids0, _, _ = srv.search(small_ds.queries, cfg)
+    rec0 = recall_at_k(ids0, small_ds.gt_ids, 10)
+
+    moved = srv.rebalance(6)   # scale out 4 -> 6 shards
+    assert moved > 0
+    ids1, _, _ = srv.search(small_ds.queries, cfg)
+    assert np.array_equal(ids0, ids1)  # results invariant under re-shard
+
+    srv.kill_shard(5)          # failure still graceful at new topology
+    ids2, _, _ = srv.search(small_ds.queries, cfg)
+    rec2 = recall_at_k(ids2, small_ds.gt_ids, 10)
+    assert rec2 >= rec0 - 0.3
+
+    srv.revive()
+    moved = srv.rebalance(2)   # scale in 6 -> 2
+    ids3, _, _ = srv.search(small_ds.queries, cfg)
+    assert np.array_equal(ids0, ids3)

@@ -1,0 +1,57 @@
+"""Fault tolerance: shard loss degrades recall gracefully (no crash),
+hedged fetches tame the p99 tail, elastic router behavior."""
+import numpy as np
+
+from repro.core.distributed import ShardedServing
+from repro.core.search import SearchConfig, write_partitions
+from repro.data.vectors import recall_at_k
+from repro.storage.simulator import ObjectStore, StorageConfig
+
+
+def _serving(built_pag, ds, kind="mem", n_shards=4, seed=0):
+    store = ObjectStore(StorageConfig.preset(kind, seed=seed))
+    write_partitions(built_pag, ds.base, store, n_shards=n_shards)
+    return ShardedServing(pag=built_pag, store=store, n_shards=n_shards,
+                          dim=ds.d)
+
+
+def test_shard_failure_graceful(built_pag, small_ds):
+    srv = _serving(built_pag, small_ds)
+    cfg = SearchConfig(L=64, k=10, n_probe_max=64)
+    ids, _, _ = srv.search(small_ds.queries, cfg)
+    base = recall_at_k(ids, small_ds.gt_ids, 10)
+
+    srv.kill_shard(0)   # 1/4 of partitions gone
+    ids, _, st = srv.search(small_ds.queries, cfg)
+    degraded = recall_at_k(ids, small_ds.gt_ids, 10)
+    # no exception; recall drops at most ~ the lost partition fraction
+    # (redundant copies on other shards absorb part of the loss)
+    assert degraded >= base - 0.30, (base, degraded)
+    assert degraded >= 0.5
+
+    srv.revive()
+    ids, _, _ = srv.search(small_ds.queries, cfg)
+    assert recall_at_k(ids, small_ds.gt_ids, 10) >= base - 1e-9
+
+
+def test_redundancy_absorbs_failures(built_pag, small_ds):
+    """GR redundancy: recall after 1-shard loss stays above the naive
+    expectation of losing 1/n_shards of all residuals."""
+    srv = _serving(built_pag, small_ds)
+    cfg = SearchConfig(L=64, k=10, n_probe_max=64)
+    srv.kill_shard(1)
+    ids, _, _ = srv.search(small_ds.queries, cfg)
+    degraded = recall_at_k(ids, small_ds.gt_ids, 10)
+    assert degraded > 0.75 * 0.9  # redundant copies land on other shards
+
+
+def test_hedging_improves_tail(built_pag, small_ds):
+    cfg_plain = SearchConfig(L=32, k=10, n_probe_max=16, mode="sync")
+    cfg_hedge = SearchConfig(L=32, k=10, n_probe_max=16, mode="sync",
+                             hedge_after_s=3e-3)
+    srv1 = _serving(built_pag, small_ds, kind="dfs", seed=5)
+    _, _, st_plain = srv1.search(small_ds.queries, cfg_plain)
+    srv2 = _serving(built_pag, small_ds, kind="dfs", seed=5)
+    _, _, st_hedge = srv2.search(small_ds.queries, cfg_hedge)
+    assert st_hedge.p99() <= st_plain.p99() * 1.05
+    assert max(st_hedge.latencies_s) <= max(st_plain.latencies_s)

@@ -1,0 +1,115 @@
+"""Pallas kernel shape/dtype sweeps vs pure-jnp oracles (interpret=True)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("qn,n,d,k,block", [
+    (8, 500, 32, 5, 128),
+    (16, 1000, 64, 10, 256),
+    (4, 257, 16, 16, 64),      # non-multiple N
+    (32, 2048, 128, 32, 512),
+])
+def test_l2_topk_shapes(qn, n, d, k, block):
+    ks = jax.random.split(jax.random.PRNGKey(qn + n), 2)
+    q = jax.random.normal(ks[0], (qn, d))
+    x = jax.random.normal(ks[1], (n, d))
+    d2, ids = ops.l2_topk(q, x, k=k, block_n=block, interpret=True)
+    d2r, idsr = ref.l2_topk_ref(q, x, k)
+    np.testing.assert_allclose(d2, d2r, rtol=1e-4, atol=1e-4)
+    # id sets must match (ties can permute)
+    for a, b in zip(np.asarray(ids), np.asarray(idsr)):
+        assert set(a.tolist()) == set(b.tolist())
+
+
+def test_l2_topk_bf16():
+    q = jax.random.normal(jax.random.PRNGKey(0), (8, 64), jnp.bfloat16)
+    x = jax.random.normal(jax.random.PRNGKey(1), (512, 64), jnp.bfloat16)
+    d2, ids = ops.l2_topk(q, x, k=10, block_n=128, interpret=True)
+    d2r, idsr = ref.l2_topk_ref(q, x, 10)
+    np.testing.assert_allclose(d2, d2r, rtol=2e-2, atol=2e-2)
+    overlap = np.mean([len(set(a.tolist()) & set(b.tolist())) / 10
+                       for a, b in zip(np.asarray(ids), np.asarray(idsr))])
+    assert overlap >= 0.9  # discrete boundary: permutation-tolerant
+
+
+@pytest.mark.parametrize("n,m,block", [
+    (500, 4, 128), (1024, 8, 256), (777, 16, 512),
+])
+def test_pq_adc(n, m, block):
+    lut = jax.random.uniform(jax.random.PRNGKey(n), (m, 256))
+    codes = jax.random.randint(jax.random.PRNGKey(m), (n, m), 0, 256)
+    out = ops.pq_adc(lut, codes, block_n=block, interpret=True)
+    np.testing.assert_allclose(out, ref.pq_adc_ref(lut, codes),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("b,h,sq,sk,d,bq,bk,causal", [
+    (1, 2, 128, 128, 64, 64, 64, True),
+    (2, 1, 256, 256, 32, 128, 128, True),
+    (1, 1, 128, 256, 64, 64, 128, True),   # Sq != Sk (suffix causal)
+    (1, 2, 128, 128, 64, 64, 64, False),
+])
+def test_flash_attention(b, h, sq, sk, d, bq, bk, causal):
+    ks = jax.random.split(jax.random.PRNGKey(sq + sk), 3)
+    q = jax.random.normal(ks[0], (b, h, sq, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, h, sk, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, h, sk, d), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=causal, block_q=bq,
+                              block_k=bk, interpret=True)
+    outr = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(out, outr, rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_bf16():
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = jax.random.normal(ks[0], (1, 2, 128, 64), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (1, 2, 128, 64), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (1, 2, 128, 64), jnp.bfloat16)
+    out = ops.flash_attention(q, k, v, block_q=64, block_k=64,
+                              interpret=True)
+    outr = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(outr, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_model_flash_custom_vjp_matches_reference():
+    """The jnp flash path (models/attention.py custom_vjp) fwd+bwd vs the
+    naive quadratic reference."""
+    from repro.models.attention import attention, attention_reference
+
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (2, 64, 4, 16), jnp.float32)
+    k = jax.random.normal(ks[1], (2, 64, 2, 16), jnp.float32)
+    v = jax.random.normal(ks[2], (2, 64, 2, 16), jnp.float32)
+
+    out = attention(q, k, v, chunk=16)
+    outr = attention_reference(q, k, v)
+    np.testing.assert_allclose(out, outr, rtol=2e-3, atol=2e-3)
+
+    def loss_flash(q, k, v):
+        return jnp.sum(jnp.square(attention(q, k, v, chunk=16)))
+
+    def loss_ref(q, k, v):
+        return jnp.sum(jnp.square(attention_reference(q, k, v)))
+
+    g1 = jax.grad(loss_flash, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, rtol=5e-3, atol=5e-3)
+
+
+def test_model_flash_windowed_grad():
+    from repro.models.attention import attention, attention_reference
+
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (1, 64, 2, 16), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 64, 2, 16), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 64, 2, 16), jnp.float32)
+    out = attention(q, k, v, window=16, meta_tokens=4, chunk=16)
+    outr = attention_reference(q, k, v, window=16, meta_tokens=4)
+    np.testing.assert_allclose(out, outr, rtol=2e-3, atol=2e-3)

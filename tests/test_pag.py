@@ -1,0 +1,86 @@
+"""PAG invariants + recall (the paper's core structure, §IV)."""
+import numpy as np
+import pytest
+
+from repro.core.pag import build_pag
+from repro.core.search import SearchConfig, search_pag
+from repro.data.vectors import recall_at_k
+
+
+def test_every_point_covered(built_pag, small_ds):
+    """Definition 4: every dataset point is an aggregation point or is
+    assigned to >= 1 partition (promotion guarantees completeness)."""
+    n = small_ds.n
+    covered = np.zeros(n, bool)
+    src = built_pag.node_src[: built_pag.n_parts]
+    covered[src[src >= 0]] = True
+    for pid in range(built_pag.n_parts):
+        ids = built_pag.plist[pid, : built_pag.pcount[pid]]
+        covered[ids] = True
+    assert covered.all()
+
+
+def test_capacity_respected(built_pag):
+    """DRS capacity cap λ/p (Alg 3): no partition exceeds cap."""
+    assert (built_pag.pcount[: built_pag.n_parts] <= built_pag.cap).all()
+
+
+def test_plist_consistent(built_pag, small_ds):
+    """plist entries are valid ids; no duplicate within a partition."""
+    for pid in range(0, built_pag.n_parts, 7):
+        cnt = built_pag.pcount[pid]
+        ids = built_pag.plist[pid, :cnt]
+        assert (ids >= 0).all() and (ids < small_ds.n).all()
+        assert len(set(ids.tolist())) == cnt
+        assert (built_pag.plist[pid, cnt:] == -1).all()
+
+
+def test_radii_nonnegative_capped(built_pag):
+    r = built_pag.radius[: built_pag.n_parts]
+    assert (r >= 0).all()
+    # γ2 global cap: no radius exceeds the max by construction
+    assert np.isfinite(r).all()
+
+
+def test_recall_high_budget(built_pag, small_ds, pag_store):
+    cfg = SearchConfig(L=128, k=10, n_probe_max=128)
+    ids, _, _ = search_pag(built_pag, small_ds.d, small_ds.queries,
+                           pag_store, cfg, n_shards=4)
+    rec = recall_at_k(ids, small_ds.gt_ids, 10)
+    assert rec >= 0.90, rec
+
+
+def test_recall_monotone_in_probes(built_pag, small_ds, pag_store):
+    recs = []
+    for npb in (8, 32, 128):
+        cfg = SearchConfig(L=128, k=10, n_probe_max=npb)
+        ids, _, _ = search_pag(built_pag, small_ds.d, small_ds.queries,
+                               pag_store, cfg, n_shards=4)
+        recs.append(recall_at_k(ids, small_ds.gt_ids, 10))
+    assert recs[0] <= recs[1] + 0.02 and recs[1] <= recs[2] + 0.02, recs
+
+
+def test_naive_pag_builds(uniform_ds):
+    """Algorithm 2 (no DRS) still covers every point and searches."""
+    from repro.core.search import write_partitions
+    from repro.storage.simulator import ObjectStore, StorageConfig
+
+    pag = build_pag(uniform_ds.base, p=0.25, k=4, use_drs=False,
+                    redundancy=1, seed=3)
+    store = ObjectStore(StorageConfig.preset("mem"))
+    write_partitions(pag, uniform_ds.base, store)
+    cfg = SearchConfig(L=64, k=10, n_probe_max=64)
+    ids, _, _ = search_pag(pag, uniform_ds.d, uniform_ds.queries, store,
+                           cfg)
+    rec = recall_at_k(ids, uniform_ds.gt_ids, 10)
+    assert rec >= 0.7, rec
+
+
+def test_drs_tail_vs_naive(small_ds):
+    """DRS bounds the partition-size long tail (paper Fig 13 rationale)."""
+    drs = build_pag(small_ds.base, p=0.2, lam=3.0, seed=0)
+    naive = build_pag(small_ds.base, p=0.2, use_drs=False, seed=0)
+    drs_max = drs.pcount[: drs.n_parts].max()
+    naive_max = naive.pcount[: naive.n_parts].max()
+    assert drs_max <= drs.cap
+    assert naive_max > drs_max  # the unbounded tail DRS removes

@@ -1,0 +1,118 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.training.compression import dequantize, quantize
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(4, 256))
+def test_quantization_error_bound(seed, n):
+    """int8 symmetric quantization: |err| <= scale (=absmax/127)."""
+    rng = np.random.default_rng(seed)
+    g = rng.standard_normal(n).astype(np.float32) * rng.uniform(0.01, 100)
+    scale = np.abs(g).max() / 127.0
+    q = quantize(jnp.asarray(g), jnp.float32(scale))
+    back = np.asarray(dequantize(q, jnp.float32(scale)))
+    assert np.max(np.abs(back - g)) <= scale * (1 + 1e-3)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 64), st.integers(2, 6),
+       st.integers(8, 64))
+def test_l2_topk_blocked_equals_global(seed, n, qn, block):
+    """Running blocked top-k == global top-k for any N/block split."""
+    from repro.kernels import ops, ref
+    rng = np.random.default_rng(seed)
+    d = 8
+    q = rng.standard_normal((qn, d)).astype(np.float32)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    k = min(5, n)
+    d2, ids = ops.l2_topk(jnp.asarray(q), jnp.asarray(x), k=k,
+                          block_n=block, interpret=True)
+    d2r, idsr = ref.l2_topk_ref(jnp.asarray(q), jnp.asarray(x), k)
+    np.testing.assert_allclose(np.sort(d2, 1), np.sort(d2r, 1),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 8), st.integers(1, 128))
+def test_occlusion_keeps_nearest(seed, k, b):
+    """Def 5 RNG filter always keeps each row's nearest candidate."""
+    from repro.core.pag import _occlusion_filter
+    rng = np.random.default_rng(seed)
+    A = rng.standard_normal((64, 8)).astype(np.float32)
+    cand = rng.integers(0, 64, size=(b, k)).astype(np.int64)
+    d2 = rng.uniform(0.1, 10, size=(b, k)).astype(np.float32)
+    keep = _occlusion_filter(cand, d2, A, max_keep=max(k // 2, 1))
+    nearest = d2.argmin(axis=1)
+    assert keep[np.arange(b), nearest].all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 40), st.integers(1, 5),
+       st.integers(1, 6))
+def test_capacity_never_exceeded(seed, b, k, cap):
+    from repro.core.pag import _accept_with_capacity
+    rng = np.random.default_rng(seed)
+    n_agg = 10
+    agg = rng.integers(0, n_agg, size=(b, k))
+    d2 = rng.uniform(0, 1, size=(b, k)).astype(np.float32)
+    ok = rng.uniform(size=(b, k)) < 0.8
+    pcount = np.zeros(64, np.int32)
+    plist = np.full((64, cap), -1, np.int32)
+    res_ids = np.arange(b)
+    _accept_with_capacity(res_ids, agg, d2, ok, pcount, plist, cap)
+    assert (pcount <= cap).all()
+    for pid in range(n_agg):
+        row = plist[pid][plist[pid] >= 0]
+        assert len(row) == pcount[pid]
+        assert len(set(row.tolist())) == len(row)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 32), st.integers(2, 16))
+def test_online_softmax_equals_softmax(seed, s, chunk):
+    """The flash fwd (online softmax over chunks) == plain softmax."""
+    from repro.models.attention import attention, attention_reference
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((1, s, 2, 8)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, s, 2, 8)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, s, 2, 8)), jnp.float32)
+    out = attention(q, k, v, chunk=chunk)
+    outr = attention_reference(q, k, v)
+    np.testing.assert_allclose(out, outr, rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 128))
+def test_cross_entropy_matches_manual(seed, v):
+    from repro.training.train_step import cross_entropy
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(rng.standard_normal((2, 3, v)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, v, size=(2, 3)))
+    loss = cross_entropy(logits, labels, v, z_loss_weight=0.0)
+    p = jax.nn.log_softmax(logits, -1)
+    manual = -jnp.mean(jnp.take_along_axis(p, labels[..., None], -1))
+    np.testing.assert_allclose(loss, manual, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_timeline_async_never_worse(seed):
+    """Async completion <= sync completion for any fetch schedule."""
+    from repro.storage.simulator import QueryTimeline
+    rng = np.random.default_rng(seed)
+    tl_a = QueryTimeline()
+    tl_s = QueryTimeline()
+    for _ in range(rng.integers(1, 10)):
+        dt = float(rng.uniform(0, 1e-3))
+        tl_a.add_compute(dt)
+        tl_s.add_compute(dt)
+        lat = float(rng.uniform(0, 5e-3))
+        cost = float(rng.uniform(0, 1e-3))
+        tl_a.issue_io(lat, cost)
+        tl_s.issue_io(lat, cost)
+    assert tl_a.finish_async() <= tl_s.finish_sync() + 1e-12

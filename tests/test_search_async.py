@@ -1,0 +1,57 @@
+"""Asynchronous search (Alg 5): identical results to the blocking mode,
+strictly better simulated latency under identical storage draws."""
+import numpy as np
+
+from repro.core.search import SearchConfig, search_pag, write_partitions
+from repro.storage.simulator import (
+    FetchRecord,
+    ObjectStore,
+    QueryTimeline,
+    StorageConfig,
+)
+
+
+def _run(built_pag, ds, mode, seed=7):
+    store = ObjectStore(StorageConfig.preset("dfs", seed=seed))
+    write_partitions(built_pag, ds.base, store, n_shards=4)
+    cfg = SearchConfig(L=64, k=10, n_probe_max=32, mode=mode)
+    return search_pag(built_pag, ds.d, ds.queries, store, cfg, n_shards=4)
+
+
+def test_async_same_results(built_pag, small_ds):
+    ids_a, d2_a, st_a = _run(built_pag, small_ds, "async")
+    ids_s, d2_s, st_s = _run(built_pag, small_ds, "sync")
+    assert np.array_equal(ids_a, ids_s)
+    assert np.allclose(d2_a, d2_s)
+
+
+def test_async_latency_dominates(built_pag, small_ds):
+    """Same storage draws (same seed/order) -> async <= sync per query."""
+    _, _, st_a = _run(built_pag, small_ds, "async", seed=11)
+    _, _, st_s = _run(built_pag, small_ds, "sync", seed=11)
+    a = np.asarray(st_a.latencies_s)
+    s = np.asarray(st_s.latencies_s)
+    assert (a <= s + 1e-12).all()
+    assert a.mean() < s.mean()
+
+
+def test_timeline_semantics():
+    tl = QueryTimeline()
+    tl.add_compute(1.0)
+    tl.issue_io(latency=5.0, scan_cost=1.0)   # issued at t=1, ready t=6
+    tl.add_compute(2.0)                       # traversal ends t=3
+    tl.issue_io(latency=0.5, scan_cost=1.0)   # issued t=3, ready t=3.5
+    # async: scan2 at max(3, 3.5)=3.5 -> 4.5; scan1 at max(4.5, 6) -> 7
+    assert abs(tl.finish_async() - 7.0) < 1e-9
+    # sync: all issued at t=3, wait max latency 5 -> 8, scans 2 -> 10
+    assert abs(tl.finish_sync() - 10.0) < 1e-9
+
+
+def test_app_early_stop_reduces_probes(built_pag, small_ds, pag_store):
+    tight = SearchConfig(L=64, k=10, n_probe_max=64, rho=1.0)
+    loose = SearchConfig(L=64, k=10, n_probe_max=64, rho=100.0)
+    _, _, st_t = search_pag(built_pag, small_ds.d, small_ds.queries,
+                            pag_store, tight, n_shards=4)
+    _, _, st_l = search_pag(built_pag, small_ds.d, small_ds.queries,
+                            pag_store, loose, n_shards=4)
+    assert np.mean(st_t.n_probes) <= np.mean(st_l.n_probes)

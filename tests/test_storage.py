@@ -1,0 +1,53 @@
+"""Storage simulator: latency tiers, failure injection, hedging."""
+import numpy as np
+import pytest
+
+from repro.storage.simulator import ObjectStore, StorageConfig
+
+
+def _store(kind, seed=0):
+    s = ObjectStore(StorageConfig.preset(kind, seed=seed))
+    s.put("a/0", np.zeros(1024, np.float32))
+    return s
+
+
+def test_latency_tiers_ordered():
+    lats = {}
+    for kind in ("mem", "ssd", "dfs"):
+        s = _store(kind)
+        draws = [s.get("a/0")[1] for _ in range(200)]
+        lats[kind] = np.mean(draws)
+    assert lats["mem"] < lats["ssd"] < lats["dfs"]
+    assert lats["mem"] == 0.0
+    # paper Table I: DFS 0.1-10ms band
+    assert 1e-4 < lats["dfs"] < 2e-2
+
+
+def test_failure_injection():
+    s = _store("ssd")
+    s.put("b/0", np.ones(8, np.float32))
+    s.kill_prefix("a/")
+    with pytest.raises(KeyError):
+        s.get("a/0")
+    s.get("b/0")  # other shards unaffected
+    s.revive_all()
+    s.get("a/0")
+
+
+def test_hedged_requests_tame_tail():
+    s1 = _store("dfs", seed=3)
+    plain = np.array([s1.get("a/0")[1] for _ in range(2000)])
+    s2 = _store("dfs", seed=3)
+    hedge = np.quantile(plain, 0.95)
+    hedged = np.array([s2.get_hedged("a/0", hedge)[1]
+                       for _ in range(2000)])
+    assert np.quantile(hedged, 0.999) < np.quantile(plain, 0.999)
+    assert hedged.mean() <= plain.mean() * 1.05
+
+
+def test_accounting():
+    s = _store("mem")
+    before = s.n_gets
+    s.get("a/0")
+    assert s.n_gets == before + 1
+    assert s.bytes_fetched >= 4096
