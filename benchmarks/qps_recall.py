@@ -3,8 +3,15 @@
 disk  -> Fig 8 (disk-memory hybrid)
 mem   -> Fig 9 (in-memory; HNSW joins)
 dfs   -> Fig 10 (DFS-memory hybrid; the paper's headline scenario)
+
+PAG is reported through both data-plane engines: "PAG" is the batched
+engine (cross-query coalesced fetches, batch event clock -> batch_qps),
+"PAG-seq" is the seed per-query loop (serial stream). Same probes and
+identical results by construction; the QPS gap is the batching win.
 """
 from __future__ import annotations
+
+import dataclasses
 
 import numpy as np
 
@@ -26,12 +33,24 @@ def _curves(ctx: BenchContext, storage: str, k: int = 10):
     rows = []
     pag, _ = ctx.pag("clustered", p=0.2, lam=3.0, redundancy=4)
     for L, npb in PAG_SWEEP:
-        store = ctx.pag_store("clustered", storage, pag, seed=1)
         cfg = SearchConfig(L=L, k=k, n_probe_max=npb, mode="async")
+        store = ctx.pag_store("clustered", storage, pag, seed=1)
         ids, _, st = search_pag(pag, ds.d, ds.queries, store, cfg,
                                 n_shards=N_SHARDS)
-        rows.append(("PAG", f"L{L}/p{npb}",
-                     recall_at_k(ids, ds.gt_ids, k), st.qps()))
+        rec = recall_at_k(ids, ds.gt_ids, k)
+        rows.append(("PAG", f"L{L}/p{npb}", rec, st.batch_qps()))
+
+        store = ctx.pag_store("clustered", storage, pag, seed=1)
+        cfg_seq = dataclasses.replace(cfg, engine="per_query")
+        ids_s, _, st_s = search_pag(pag, ds.d, ds.queries, store, cfg_seq,
+                                    n_shards=N_SHARDS)
+        rec_s = recall_at_k(ids_s, ds.gt_ids, k)
+        rows.append(("PAG-seq", f"L{L}/p{npb}", rec_s, st_s.batch_qps()))
+        speedup = st.batch_qps() / max(st_s.batch_qps(), 1e-9)
+        dedup = st.n_distinct_fetches / max(sum(st.n_probes), 1)
+        emit(f"qps_recall/{storage}/batched_speedup/L{L}p{npb}", 0.0,
+             f"speedup={speedup:.2f};distinct_frac={dedup:.3f};"
+             f"fetches={st.n_distinct_fetches};probes={sum(st.n_probes)}")
 
     dk, dk_store, _ = ctx.diskann("clustered", storage)
     for L in DK_SWEEP:

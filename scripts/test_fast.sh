@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# Fast test tier: everything not marked @pytest.mark.slow.
+# Full tier-1 remains: PYTHONPATH=src python -m pytest -x -q
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m pytest -q -m "not slow" "$@"

@@ -1,10 +1,12 @@
 """Distributed serving of the PAG index (DESIGN.md §6).
 
 * ShardedServing: partitions round-robined over shards; the replicated
-  in-memory PG routes queries; per-shard fetch + scan; global top-k merge.
-  Shard failure -> the router drops that shard's partitions (bounded
-  recall degradation, tests/test_fault_tolerance.py); stragglers tamed by
-  hedged duplicate fetches.
+  in-memory PG routes queries; queries go through the BATCHED data plane
+  (core/search.py: cross-query coalesced get_many fetches, one Pallas
+  pool scan per batch) unless cfg.engine overrides it. Shard failure ->
+  the router drops that shard's partitions (bounded recall degradation,
+  tests/test_fault_tolerance.py); stragglers tamed by hedged duplicate
+  fetches.
 
 * anns_serve_step / anns_build_assign_step: the jax-native pod-scale data
   plane, written with shard_map over the production mesh — these are the
@@ -21,8 +23,9 @@ from typing import Dict, List, Optional, Set, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.distributed.compat import shard_map
 
 from repro.core.distances import cdist2
 from repro.core.pag import PAG
@@ -114,7 +117,9 @@ def make_anns_serve_step(mesh: Mesh, k: int = 100):
             local_ids = jnp.take_along_axis(rows_blk, idx, axis=1)
             r = jax.lax.axis_index(axes[0])
             for a in axes[1:]:
-                r = r * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+                # axis sizes are static from the mesh (jax.lax.axis_size
+                # only exists on newer jax)
+                r = r * mesh.shape[a] + jax.lax.axis_index(a)
             gids = local_ids + r * n_local
             for a in axes:                                # hierarchical merge
                 neg = jax.lax.all_gather(neg, a, axis=1, tiled=True)

@@ -2,9 +2,47 @@
 Partition Probe early stop (§V-A) + asynchronous partition fetch (Alg 5).
 
 Execution = real computation (exact recall); time = storage-simulator
-event clock (see DESIGN.md §8). The traversal itself is the batched jitted
-Algorithm 1; the APP replay and the async I/O timeline are per-query numpy
-over its recorded expansion order.
+event clock (see DESIGN.md §8). The traversal is the batched jitted
+Algorithm 1; the partition scan is one masked Pallas ``l2_topk`` launch
+over the pooled candidates of the whole batch.
+
+Two data-plane engines (``SearchConfig.engine``):
+
+* ``"batched"`` (default) — the batch-coalesced plane. The graph phase
+  runs for the whole query batch, then partition probes are coalesced
+  across queries: each distinct partition is fetched ONCE per batch via
+  ``ObjectStore.get_many`` (one concurrent RPC wave, hedging preserved),
+  filled into the optional cache, and scanned for all probing queries in
+  a single vectorized distance/top-k pass. Per-query latency accounting
+  survives: each query's ``QueryTimeline`` carries its own traversal
+  compute and its own probes, with a shared fetch's latency charged to
+  every prober. Batch throughput (``SearchStats.batch_qps``) comes from
+  a batch-level event clock: fetches issue as their first prober's
+  traversal retires, coalesced scans amortize the per-partition
+  dispatch overhead across probers.
+
+* ``"per_query"`` — the seed data plane kept as reference/baseline: a
+  python loop issuing blocking (or hedged) per-partition GETs per
+  query. Same probes, same candidate pools, same scan arithmetic ⇒
+  bit-identical results to the batched engine (tested), only the
+  simulated I/O schedule differs.
+
+``SearchConfig`` knobs:
+
+* ``mode`` — ``"async"`` replays Alg 5 (fetches overlap traversal
+  compute; scans run as partitions arrive); ``"sync"`` is the blocking
+  baseline (all fetches awaited after traversal, scans back-to-back).
+  Affects only the simulated clock, never the returned neighbors.
+* ``hedge_after_s`` — straggler mitigation: each GET is duplicated
+  after this many seconds and the minimum latency wins (applies to both
+  engines and to ``get_many``). ``None`` disables hedging.
+* ``cache`` — optional ``PartitionCache``. Lookups happen before any
+  storage GET; hits cost zero latency for every prober. In the batched
+  engine the cache is consulted once per distinct partition and filled
+  from the fetch wave; coalesced probers beyond the first are counted
+  as hits (see ``PartitionCache.account_shared``) so hit-rate stays
+  comparable with the per-query plane.
+* ``scan_block`` — candidate-pool block size of the Pallas scan.
 """
 from __future__ import annotations
 
@@ -16,6 +54,7 @@ import numpy as np
 
 from repro.core.graph_search import greedy_search
 from repro.core.pag import PAG
+from repro.kernels import ops
 from repro.storage.simulator import (
     ComputeModel,
     ObjectStore,
@@ -24,6 +63,7 @@ from repro.storage.simulator import (
 )
 
 INF = np.float32(3.4e38)
+ID_SENTINEL = 2 ** 62   # invalid-id marker used during dedup
 
 
 def write_partitions(pag: PAG, x: np.ndarray, store: ObjectStore,
@@ -51,8 +91,10 @@ class SearchConfig:
     rho: float = 1.25           # APP scale factor (paper's ρ)
     n_probe_max: int = 16       # cap on fetched partitions
     mode: str = "async"         # async | sync (Alg 5 vs blocking)
+    engine: str = "batched"     # batched | per_query (data plane)
     hedge_after_s: Optional[float] = None  # straggler mitigation
     cache: Optional[object] = None  # PartitionCache (beyond-paper, §V-B)
+    scan_block: int = 256       # Pallas pool-scan block size
 
 
 @dataclasses.dataclass
@@ -60,10 +102,18 @@ class SearchStats:
     latencies_s: List[float]
     n_probes: List[int]
     n_hops: List[int]
+    n_distinct_fetches: int = 0   # storage GETs after coalescing + cache
+    batch_span_s: float = 0.0     # event-clock makespan of the batch
 
     def qps(self) -> float:
         lat = np.asarray(self.latencies_s)
         return float(1.0 / np.maximum(lat.mean(), 1e-12))
+
+    def batch_qps(self) -> float:
+        """Throughput of the whole batch on the simulated event clock
+        (per_query engine: serial stream, span = sum of latencies)."""
+        return float(len(self.latencies_s)
+                     / max(self.batch_span_s, 1e-12))
 
     def p999(self) -> float:
         return float(np.quantile(np.asarray(self.latencies_s), 0.999))
@@ -95,6 +145,88 @@ def _app_probe_order(path: np.ndarray, path_d2: np.ndarray, hops: int,
     return probes
 
 
+def _dedup_first(ids: np.ndarray) -> np.ndarray:
+    """Keep-mask of the first occurrence of each id (redundant copies,
+    Def 5). Invalid ids (< 0) map to the ID_SENTINEL and are dropped."""
+    ids = np.where(ids >= 0, ids, ID_SENTINEL)
+    _, first = np.unique(ids, return_index=True)
+    mask = np.zeros(len(ids), bool)
+    mask[first] = True
+    mask &= ids < ID_SENTINEL
+    return mask
+
+
+def _scan_pools(queries: np.ndarray, pool_ids: List[np.ndarray],
+                pool_vecs: List[np.ndarray], k: int, scan_block: int
+                ) -> Tuple[np.ndarray, np.ndarray]:
+    """One vectorized distance/top-k pass over every query's candidate
+    pool (ragged rows padded with id -1), routed through the Pallas
+    masked l2_topk kernel. Returns (ids [Q, k] int64, d2 [Q, k])."""
+    q_count, d = queries.shape
+    c_max = max((len(p) for p in pool_ids), default=0)
+    if c_max == 0:
+        return (np.full((q_count, k), -1, np.int64),
+                np.full((q_count, k), INF, np.float32))
+    ids_pad = np.full((q_count, c_max), -1, np.int32)
+    vecs_pad = np.zeros((q_count, c_max, d), np.float32)
+    for qi in range(q_count):
+        n = len(pool_ids[qi])
+        if n:
+            ids_pad[qi, :n] = pool_ids[qi]
+            vecs_pad[qi, :n] = pool_vecs[qi]
+    d2, ids = ops.l2_topk_masked(
+        jnp.asarray(queries, jnp.float32), jnp.asarray(vecs_pad),
+        jnp.asarray(ids_pad), k=k, block_c=scan_block)
+    return np.asarray(ids).astype(np.int64), np.asarray(d2)
+
+
+def _fetch_batched(probes_all: List[List[int]], key_of, store: ObjectStore,
+                   cfg: SearchConfig, dead_shard_fallback: bool
+                   ) -> Tuple[Dict[int, np.ndarray], Dict[int, float],
+                              Dict[int, List[int]], List[int], int]:
+    """Coalesce partition probes across the batch: one cache pass + one
+    concurrent get_many wave over the distinct partitions. Returns
+    (objs, latency-per-pid, probers-per-pid, first-probe order,
+    n_store_fetches)."""
+    order: List[int] = []
+    probers: Dict[int, List[int]] = {}
+    for qi, probes in enumerate(probes_all):
+        for pid in probes:
+            if pid not in probers:
+                probers[pid] = []
+                order.append(pid)
+            probers[pid].append(qi)
+
+    objs: Dict[int, np.ndarray] = {}
+    lat: Dict[int, float] = {}
+    to_fetch: List[int] = []
+    for pid in order:
+        cached = cfg.cache.get(key_of(pid)) if cfg.cache is not None \
+            else None
+        if cached is not None:
+            objs[pid], lat[pid] = cached, 0.0  # local-memory hit
+        else:
+            to_fetch.append(pid)
+
+    fetched = store.get_many(
+        [key_of(pid) for pid in to_fetch],
+        hedge_after_s=cfg.hedge_after_s,
+        on_missing="skip" if dead_shard_fallback else "raise")
+    for pid in to_fetch:
+        got = fetched.get(key_of(pid))
+        if got is None:
+            continue  # dead shard: degraded, skip its partition
+        objs[pid], lat[pid] = got
+    if cfg.cache is not None:
+        cfg.cache.put_many({key_of(pid): objs[pid] for pid in to_fetch
+                            if pid in objs})
+        for pid in order:
+            if pid in objs:
+                cfg.cache.account_shared(key_of(pid),
+                                         len(probers[pid]) - 1)
+    return objs, lat, probers, order, len(fetched)
+
+
 def search_pag(pag: PAG, x_dim: int, queries: np.ndarray,
                store: ObjectStore, cfg: SearchConfig,
                compute: Optional[ComputeModel] = None,
@@ -114,68 +246,115 @@ def search_pag(pag: PAG, x_dim: int, queries: np.ndarray,
     beam_d2 = np.asarray(res.dists)
 
     q_count = queries.shape[0]
-    out_ids = np.full((q_count, cfg.k), -1, np.int64)
-    out_d2 = np.full((q_count, cfg.k), INF, np.float32)
-    stats = SearchStats([], [], [])
-
     R_edges = pg.nbrs.shape[1]
+    traversal_s = [compute.search_hop(int(hops[qi]) * R_edges, x_dim)
+                   for qi in range(q_count)]
+    # APP replay: probe order per query (nonempty partitions only)
+    probes_all = [
+        [pid for pid in _app_probe_order(path_all[qi], path_all_d2[qi],
+                                         int(hops[qi]), pag.radius,
+                                         cfg.rho, cfg.n_probe_max)
+         if int(pag.pcount[pid]) > 0]
+        for qi in range(q_count)
+    ]
+
+    def key_of(pid: int) -> str:
+        return f"{prefix}/{pid % n_shards}/{pid}"
+
+    timelines = [QueryTimeline() for _ in range(q_count)]
     for qi in range(q_count):
-        tl = QueryTimeline()
-        h = int(hops[qi])
-        tl.add_compute(compute.search_hop(h * R_edges, x_dim))
+        timelines[qi].add_compute(traversal_s[qi])
 
-        probes = _app_probe_order(path_all[qi], path_all_d2[qi], h,
-                                  pag.radius, cfg.rho, cfg.n_probe_max)
-        # candidate pool: aggregation points themselves (they are dataset
-        # points) + residuals of probed partitions
-        cand_ids = [pag.node_src[beam_ids[qi]].astype(np.int64)]
-        cand_d2 = [beam_d2[qi].astype(np.float32)]
-        n_fetched = 0
-        for pid in probes:
-            cnt = int(pag.pcount[pid])
-            if cnt == 0:
+    if cfg.engine == "batched":
+        objs, lat, probers, order, n_store = _fetch_batched(
+            probes_all, key_of, store, cfg, dead_shard_fallback)
+        # per-query accounting: every prober is charged the shared
+        # fetch's latency and its own scan of the partition
+        for pid in order:
+            if pid not in objs:
                 continue
-            key = f"{prefix}/{pid % n_shards}/{pid}"
-            cached = cfg.cache.get(key) if cfg.cache is not None else None
-            if cached is not None:
-                obj, lat = cached, 0.0  # local-memory hit
-            else:
-                try:
-                    if cfg.hedge_after_s is not None:
-                        obj, lat = store.get_hedged(key, cfg.hedge_after_s)
-                    else:
-                        obj, lat = store.get(key)
-                except KeyError:
-                    if dead_shard_fallback:
-                        continue  # degraded: skip dead shard's partition
-                    raise
-                if cfg.cache is not None:
-                    cfg.cache.put(key, obj)
-            n_fetched += 1
-            scan_cost = compute.scan(cnt, x_dim)
-            tl.issue_io(lat, scan_cost)
-            vecs = obj[:, 1:]
-            ids = obj[:, 0].astype(np.int64)
-            diff = vecs - queries[qi][None, :]
-            d2 = np.einsum("nd,nd->n", diff, diff)
-            cand_ids.append(ids)
-            cand_d2.append(d2.astype(np.float32))
+            scan = compute.scan(objs[pid].shape[0], x_dim)
+            for qi in probers[pid]:
+                timelines[qi].issue_io(lat[pid], scan)
+        # batch event clock: a fetch issues when its FIRST prober's
+        # traversal retires; one coalesced scan per distinct partition
+        bt = QueryTimeline()
+        first_prober = {pid: probers[pid][0] for pid in order}
+        for qi in range(q_count):
+            bt.add_compute(traversal_s[qi])
+            for pid in probes_all[qi]:
+                if first_prober[pid] == qi and pid in objs:
+                    bt.issue_io(lat[pid], compute.scan_batched(
+                        objs[pid].shape[0], x_dim, len(probers[pid])))
+        batch_span = bt.finish_async() if cfg.mode == "async" \
+            else bt.finish_sync()
+        n_distinct = n_store
+    elif cfg.engine == "per_query":
+        # seed data plane: blocking per-partition GETs, query by query
+        objs = {}
+        n_distinct = 0
+        for qi in range(q_count):
+            for pid in probes_all[qi]:
+                key = key_of(pid)
+                cached = cfg.cache.get(key) if cfg.cache is not None \
+                    else None
+                if cached is not None:
+                    obj, io_lat = cached, 0.0  # local-memory hit
+                else:
+                    try:
+                        if cfg.hedge_after_s is not None:
+                            obj, io_lat = store.get_hedged(
+                                key, cfg.hedge_after_s)
+                        else:
+                            obj, io_lat = store.get(key)
+                    except KeyError:
+                        if dead_shard_fallback:
+                            continue  # degraded: skip dead partition
+                        raise
+                    n_distinct += 1
+                    if cfg.cache is not None:
+                        cfg.cache.put(key, obj)
+                objs[pid] = obj
+                timelines[qi].issue_io(io_lat,
+                                       compute.scan(obj.shape[0], x_dim))
+        batch_span = None  # serial stream: filled from latencies below
+    else:
+        raise ValueError(f"unknown engine: {cfg.engine!r}")
 
-        ids = np.concatenate(cand_ids)
-        d2 = np.concatenate(cand_d2)
-        ids = np.where(ids >= 0, ids, 2**62)
-        # dedup by id keeping min distance (redundant copies; Def 5)
-        order = np.lexsort((d2, ids))
-        ids, d2 = ids[order], d2[order]
-        first = np.r_[True, ids[1:] != ids[:-1]]
-        ids, d2 = ids[first], d2[first]
-        top = np.argsort(d2)[: cfg.k]
-        out_ids[qi, : len(top)] = np.where(ids[top] < 2**62, ids[top], -1)
-        out_d2[qi, : len(top)] = d2[top]
+    # candidate pools: aggregation points on the beam (they are dataset
+    # points) + residuals of the available probed partitions, deduped by
+    # original id (redundant copies, Def 5)
+    valid_beam = (beam_ids < pg.n_nodes) & (beam_d2 < INF)
+    beam_safe = np.minimum(beam_ids, pg.m_cap - 1)
+    pool_ids: List[np.ndarray] = []
+    pool_vecs: List[np.ndarray] = []
+    for qi in range(q_count):
+        nodes = beam_safe[qi][valid_beam[qi]]
+        ids_list = [pag.node_src[nodes].astype(np.int64)]
+        vec_list = [pg.A[nodes].astype(np.float32)]
+        for pid in probes_all[qi]:
+            obj = objs.get(pid)
+            if obj is None:
+                continue
+            ids_list.append(obj[:, 0].astype(np.int64))
+            vec_list.append(obj[:, 1:])
+        ids_cat = np.concatenate(ids_list)
+        keep = _dedup_first(ids_cat)
+        pool_ids.append(ids_cat[keep])
+        pool_vecs.append(np.concatenate(vec_list)[keep])
 
-        lat = tl.finish_async() if cfg.mode == "async" else tl.finish_sync()
-        stats.latencies_s.append(lat)
-        stats.n_probes.append(n_fetched)
-        stats.n_hops.append(h)
+    out_ids, out_d2 = _scan_pools(queries.astype(np.float32), pool_ids,
+                                  pool_vecs, cfg.k, cfg.scan_block)
 
+    stats = SearchStats([], [], [], n_distinct_fetches=n_distinct)
+    for qi in range(q_count):
+        tl = timelines[qi]
+        lat_q = tl.finish_async() if cfg.mode == "async" \
+            else tl.finish_sync()
+        stats.latencies_s.append(lat_q)
+        stats.n_probes.append(
+            sum(1 for pid in probes_all[qi] if pid in objs))
+        stats.n_hops.append(int(hops[qi]))
+    stats.batch_span_s = batch_span if batch_span is not None \
+        else float(np.sum(stats.latencies_s))
     return out_ids, out_d2, stats

@@ -1,0 +1,39 @@
+"""jax version-compatibility shims.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to the public
+``jax.shard_map`` (and renamed ``check_rep`` -> ``check_vma``) across jax
+releases; the container pins jax 0.4.37 where only the experimental path
+exists. Import it from here so every call site works on either side.
+"""
+from __future__ import annotations
+
+import inspect
+
+try:  # newer jax: public API
+    from jax import shard_map as _shard_map_impl  # type: ignore
+except ImportError:  # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+_PARAMS = inspect.signature(_shard_map_impl).parameters
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
+    """Version-portable shard_map (maps check_vma -> check_rep on old jax)."""
+    kw = {}
+    if check_vma is not None:
+        if "check_vma" in _PARAMS:
+            kw["check_vma"] = check_vma
+        elif "check_rep" in _PARAMS:
+            kw["check_rep"] = check_vma
+    return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, **kw)
+
+
+def abstract_mesh(shape, axis_names):
+    """Version-portable AbstractMesh: newer jax takes (axis_sizes,
+    axis_names), jax 0.4.x takes a tuple of (name, size) pairs."""
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(tuple(shape), tuple(axis_names))
+    except TypeError:
+        return AbstractMesh(tuple(zip(axis_names, shape)))

@@ -21,6 +21,26 @@ from jax.experimental import pallas as pl
 NEG_BIG = jnp.float32(-3.4e38)
 
 
+def _select_topk(merged_d, merged_i, out_d_ref, out_i_ref, k: int):
+    """Unrolled k-selection over the (running top-k ++ block) columns
+    (portable: no sort/top_k inside the kernel). Writes the new running
+    top-k into the output refs."""
+    sel_d = []
+    sel_i = []
+    for _ in range(k):
+        j = jnp.argmin(merged_d, axis=1)                       # [Q]
+        rows = jax.lax.broadcasted_iota(jnp.int32, (merged_d.shape[0],), 0)
+        best_d = merged_d[rows, j]
+        best_i = merged_i[rows, j]
+        sel_d.append(best_d)
+        sel_i.append(best_i)
+        onehot = (jax.lax.broadcasted_iota(
+            jnp.int32, merged_d.shape, 1) == j[:, None])
+        merged_d = jnp.where(onehot, 3.4e38, merged_d)
+    out_d_ref[...] = jnp.stack(sel_d, axis=1)
+    out_i_ref[...] = jnp.stack(sel_i, axis=1)
+
+
 def _kernel(q_ref, x_ref, qn_ref, xn_ref, out_d_ref, out_i_ref, *,
             k: int, block_n: int):
     i = pl.program_id(0)
@@ -42,21 +62,7 @@ def _kernel(q_ref, x_ref, qn_ref, xn_ref, out_d_ref, out_i_ref, *,
 
     merged_d = jnp.concatenate([out_d_ref[...], d2], axis=1)
     merged_i = jnp.concatenate([out_i_ref[...], ids], axis=1)
-    # unrolled k-selection (portable: no sort/top_k inside the kernel)
-    sel_d = []
-    sel_i = []
-    for _ in range(k):
-        j = jnp.argmin(merged_d, axis=1)                       # [Q]
-        rows = jax.lax.broadcasted_iota(jnp.int32, (d2.shape[0],), 0)
-        best_d = merged_d[rows, j]
-        best_i = merged_i[rows, j]
-        sel_d.append(best_d)
-        sel_i.append(best_i)
-        onehot = (jax.lax.broadcasted_iota(
-            jnp.int32, merged_d.shape, 1) == j[:, None])
-        merged_d = jnp.where(onehot, 3.4e38, merged_d)
-    out_d_ref[...] = jnp.stack(sel_d, axis=1)
-    out_i_ref[...] = jnp.stack(sel_i, axis=1)
+    _select_topk(merged_d, merged_i, out_d_ref, out_i_ref, k)
 
 
 @functools.partial(jax.jit,
@@ -98,4 +104,77 @@ def l2_topk(q: jax.Array, x: jax.Array, k: int = 10,
     valid = out_i < n
     out_d = jnp.where(valid, out_d, 3.4e38)
     out_i = jnp.where(valid, out_i, -1)
+    return out_d, out_i
+
+
+def _masked_kernel(q_ref, x_ref, id_ref, qn_ref, out_d_ref, out_i_ref, *,
+                   k: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_d_ref[...] = jnp.full_like(out_d_ref, 3.4e38)
+        out_i_ref[...] = jnp.full_like(out_i_ref, -1)
+
+    q = q_ref[...].astype(jnp.float32)            # [Q, d] resident
+    x = x_ref[...].astype(jnp.float32)            # [Q, BC, d] pool block
+    ids = id_ref[...]                             # [Q, BC] (-1 = padding)
+    # per-query batched contraction: qx[q, c] = q[q] . x[q, c]
+    qx = jax.lax.dot_general(
+        q, x, (((1,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)       # [Q, BC]
+    xn = jnp.sum(x * x, axis=2)
+    d2 = qn_ref[...][:, None] - 2.0 * qx + xn
+    d2 = jnp.maximum(d2, 0.0)
+    d2 = jnp.where(ids >= 0, d2, 3.4e38)          # mask ragged padding
+
+    merged_d = jnp.concatenate([out_d_ref[...], d2], axis=1)
+    merged_i = jnp.concatenate([out_i_ref[...], ids], axis=1)
+    _select_topk(merged_d, merged_i, out_d_ref, out_i_ref, k)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "block_c", "interpret"))
+def l2_topk_masked(q: jax.Array, pools: jax.Array, ids: jax.Array,
+                   k: int = 10, block_c: int = 256,
+                   interpret: bool = True):
+    """Ragged per-query candidate pools -> per-query top-k.
+
+    q [Q, d]; pools [Q, C, d] (row c of query i = candidate vector);
+    ids [Q, C] int32 candidate ids with -1 marking ragged padding.
+    Returns (d2 [Q, k] ascending, ids [Q, k]); rows shorter than k are
+    padded with (3.4e38, -1). One kernel launch scans the pools of ALL
+    queries of a batch (the batched-search hot loop)."""
+    qn, d = q.shape
+    c = pools.shape[1]
+    block_c = min(block_c, max(c, 1))
+    pad = (-c) % block_c
+    if pad:
+        pools = jnp.pad(pools, ((0, 0), (0, pad), (0, 0)))
+        ids = jnp.pad(ids, ((0, 0), (0, pad)), constant_values=-1)
+    c_pad = c + pad
+    q_norm = jnp.sum(q.astype(jnp.float32) ** 2, axis=1)
+
+    grid = (c_pad // block_c,)
+    out_d, out_i = pl.pallas_call(
+        functools.partial(_masked_kernel, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((qn, d), lambda i: (0, 0)),          # q resident
+            pl.BlockSpec((qn, block_c, d), lambda i: (0, i, 0)),
+            pl.BlockSpec((qn, block_c), lambda i: (0, i)),
+            pl.BlockSpec((qn,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((qn, k), lambda i: (0, 0)),          # running top-k
+            pl.BlockSpec((qn, k), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((qn, k), jnp.float32),
+            jax.ShapeDtypeStruct((qn, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q, pools, ids, q_norm)
+    valid = out_i >= 0
+    out_d = jnp.where(valid, out_d, 3.4e38)
     return out_d, out_i

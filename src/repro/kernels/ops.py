@@ -26,6 +26,15 @@ def l2_topk(q, x, k: int = 10, block_n: int = 512,
     return _l2.l2_topk(q, x, k=k, block_n=block_n, interpret=interpret)
 
 
+def l2_topk_masked(q, pools, ids, k: int = 10, block_c: int = 256,
+                   interpret: bool | None = None):
+    """q [Q, d], pools [Q, C, d], ids [Q, C] (-1 pads ragged rows)
+    -> (d2 [Q, k] ascending, ids [Q, k]); short rows pad (3.4e38, -1)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return _l2.l2_topk_masked(q, pools, ids, k=k, block_c=block_c,
+                              interpret=interpret)
+
+
 def pq_adc(lut, codes, block_n: int = 1024, interpret: bool | None = None):
     """lut [M, 256] f32, codes [N, M] -> dists [N] f32."""
     interpret = _default_interpret() if interpret is None else interpret

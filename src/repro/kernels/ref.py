@@ -16,6 +16,28 @@ def l2_topk_ref(q: jax.Array, x: jax.Array, k: int):
     return -neg, ids.astype(jnp.int32)
 
 
+def l2_topk_masked_ref(q: jax.Array, pools: jax.Array, ids: jax.Array,
+                       k: int):
+    """q [Q, d]; pools [Q, C, d]; ids [Q, C] (-1 = padding) ->
+    (d2 [Q, k], ids [Q, k]) ascending; short rows pad with (3.4e38, -1)."""
+    q = q.astype(jnp.float32)
+    pools = pools.astype(jnp.float32)
+    d2 = (jnp.sum(q * q, -1)[:, None]
+          - 2 * jnp.einsum("qd,qcd->qc", q, pools)
+          + jnp.sum(pools * pools, -1))
+    d2 = jnp.maximum(d2, 0.0)
+    d2 = jnp.where(ids >= 0, d2, 3.4e38)
+    c = pools.shape[1]
+    if c < k:  # pad so top_k has k columns to select from
+        d2 = jnp.pad(d2, ((0, 0), (0, k - c)), constant_values=3.4e38)
+        ids = jnp.pad(ids, ((0, 0), (0, k - c)), constant_values=-1)
+    neg, pos = jax.lax.top_k(-d2, k)
+    out_i = jnp.take_along_axis(ids, pos, axis=1)
+    out_d = jnp.where(out_i >= 0, -neg, 3.4e38)
+    out_i = jnp.where(out_i >= 0, out_i, -1)
+    return out_d, out_i
+
+
 def pq_adc_ref(lut: jax.Array, codes: jax.Array):
     """lut [M, 256] f32, codes [N, M] int32 -> dists [N] f32."""
     m = lut.shape[0]

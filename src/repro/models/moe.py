@@ -131,7 +131,7 @@ def _moe_local(params, x, cfg):
 
 def _moe_sharded(params, x, cfg, mesh, dist):
     """shard_map expert parallelism (see module docstring)."""
-    from jax import shard_map
+    from repro.distributed.compat import shard_map
 
     b, s, d = x.shape
     dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)

@@ -1,11 +1,12 @@
-"""Batched LM serving engine: prefill once, jitted greedy decode with a
-shared KV cache, per-sequence stop handling. The LM half of the
-RAG-serving integration (examples/rag_serve.py shows the DSANN half).
+"""Serving tier: the batched LM engine (prefill once, jitted greedy
+decode with a shared KV cache, per-sequence stop handling) and the ANN
+micro-batching front-end that feeds the batched DSANN data plane. The
+two halves of the RAG-serving integration (examples/rag_serve.py).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -65,3 +66,49 @@ class Engine:
         assert rng is not None, "temperature sampling needs an rng"
         return jax.random.categorical(
             rng, logits / self.scfg.temperature, axis=-1).astype(jnp.int32)
+
+
+class AnnsFrontend:
+    """Micro-batching front-end for the ANN data plane.
+
+    Individually-submitted queries are buffered and flushed as ONE
+    batched ``search_pag`` call, so concurrent requests share the
+    coalesced partition fetches (the batched engine's cross-query
+    dedup). ``submit`` returns a ticket; ``flush`` runs the batch and
+    returns per-ticket ``(ids, d2, latency_s)``. An explicit
+    ``max_batch`` caps request latency under heavy load: ``submit``
+    auto-flushes a full buffer into ``results``."""
+
+    def __init__(self, serving, cfg, max_batch: int = 64,
+                 compute=None):
+        self.serving = serving      # ShardedServing (or compatible)
+        self.cfg = cfg              # SearchConfig
+        self.max_batch = max_batch
+        self.compute = compute
+        self.results: Dict[int, Tuple[np.ndarray, np.ndarray, float]] = {}
+        self._pending: List[Tuple[int, np.ndarray]] = []
+        self._next_ticket = 0
+
+    def submit(self, query: np.ndarray) -> int:
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        self._pending.append((ticket, np.asarray(query)))
+        if len(self._pending) >= self.max_batch:
+            self.flush()
+        return ticket
+
+    def flush(self) -> Dict[int, Tuple[np.ndarray, np.ndarray, float]]:
+        """Run the buffered queries as one batched search. Returns (and
+        accumulates into ``results``) ticket -> (ids, d2, latency_s)."""
+        if not self._pending:
+            return self.results
+        tickets = [t for t, _ in self._pending]
+        batch = np.stack([q for _, q in self._pending])
+        self._pending = []
+        ids, d2, stats = self.serving.search(batch, self.cfg,
+                                             compute=self.compute)
+        for row, ticket in enumerate(tickets):
+            self.results[ticket] = (ids[row], d2[row],
+                                    stats.latencies_s[row])
+        self.last_stats = stats
+        return self.results

@@ -44,6 +44,21 @@ class PartitionCache:
             _, evicted = self._data.popitem(last=False)
             self._bytes -= evicted.nbytes
 
+    def put_many(self, items: "dict[str, np.ndarray]"):
+        """Fill the cache from one coalesced fetch wave."""
+        for key, value in items.items():
+            self.put(key, value)
+
+    def account_shared(self, key: str, n_extra: int):
+        """Accounting hook for the batched data plane: ``n_extra`` probers
+        beyond the first were served by a single resident / in-flight copy
+        of ``key`` (cross-query coalescing). In the per-query plane each
+        of them would have been a cache lookup against the copy the first
+        prober inserted, so they count as hits — keeping hit-rate
+        comparable across engines."""
+        if n_extra > 0:
+            self.hits += n_extra
+
     @property
     def hit_rate(self) -> float:
         total = self.hits + self.misses

@@ -56,6 +56,7 @@ class ObjectStore:
         self._rng = np.random.default_rng(cfg.seed)
         self._dead_prefixes: List[str] = []
         self.n_gets = 0
+        self.n_batch_gets = 0
         self.bytes_fetched = 0
 
     # ------------------------------------------------------------- admin
@@ -104,6 +105,33 @@ class ObjectStore:
         lat2 = hedge_after_s + self._latency(v.nbytes)
         return v, min(lat1, lat2)
 
+    def get_many(self, keys: Iterable[str],
+                 hedge_after_s: Optional[float] = None,
+                 on_missing: str = "raise"
+                 ) -> Dict[str, Tuple[np.ndarray, float]]:
+        """Coalesced batch fetch: one RPC wave, every key issued
+        concurrently (latencies drawn independently per key; hedging
+        applied per key as in get_hedged). Duplicate keys are fetched
+        once. ``on_missing``: "raise" propagates the KeyError of a dead
+        or absent key, "skip" omits it from the result (the degraded
+        dead-shard path)."""
+        if on_missing not in ("raise", "skip"):
+            raise ValueError(on_missing)
+        out: Dict[str, Tuple[np.ndarray, float]] = {}
+        for key in keys:
+            if key in out:
+                continue
+            try:
+                if hedge_after_s is not None:
+                    out[key] = self.get_hedged(key, hedge_after_s)
+                else:
+                    out[key] = self.get(key)
+            except KeyError:
+                if on_missing == "raise":
+                    raise
+        self.n_batch_gets += 1
+        return out
+
 
 @dataclasses.dataclass
 class ComputeModel:
@@ -122,6 +150,13 @@ class ComputeModel:
 
     def scan(self, n_points: int, d: int) -> float:
         return 3 * n_points * d * self.sec_per_flop \
+            + self.partition_overhead_s
+
+    def scan_batched(self, n_points: int, d: int, n_queries: int) -> float:
+        """One coalesced partition scan serving n_queries probers: the
+        distance flops scale with the probers, the per-partition dispatch
+        overhead is paid once (the batched-engine amortization)."""
+        return 3 * n_points * d * n_queries * self.sec_per_flop \
             + self.partition_overhead_s
 
 

@@ -9,6 +9,8 @@ from repro.baselines.spann import build_spann, search_spann
 from repro.data.vectors import recall_at_k
 from repro.storage.simulator import ObjectStore, StorageConfig
 
+pytestmark = pytest.mark.slow  # DiskANN/HNSW/SPANN builds dominate (minutes)
+
 
 @pytest.fixture(scope="module")
 def diskann(uniform_ds):

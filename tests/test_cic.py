@@ -1,11 +1,14 @@
 """Concurrent Index Construction (Alg 4): recall parity with monolithic."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core.build import build_pg, reachable_mask
 from repro.core.cic import cic_build
 from repro.core.graph_search import greedy_search
 from repro.data.vectors import recall_at_k
+
+pytestmark = pytest.mark.slow  # repeated full index builds, ~3 min total
 
 
 def _recall(pg, ds, L=64, k=10):

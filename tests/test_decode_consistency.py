@@ -9,6 +9,8 @@ from repro.models import decode_step, forward, init_params, prefill
 
 TOL = {"ssm": 0.05, "hybrid": 0.08}  # chunked-vs-recurrent bf16 noise
 
+pytestmark = pytest.mark.slow  # prefill+decode across every arch, minutes
+
 
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_decode_matches_forward(arch):

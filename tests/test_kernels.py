@@ -25,6 +25,29 @@ def test_l2_topk_shapes(qn, n, d, k, block):
         assert set(a.tolist()) == set(b.tolist())
 
 
+@pytest.mark.parametrize("qn,c,d,k,block", [
+    (4, 96, 16, 5, 32),
+    (9, 257, 32, 10, 128),    # non-multiple C
+    (6, 40, 24, 64, 64),      # k > pool size: rows pad (-1, 3.4e38)
+])
+def test_l2_topk_masked_ragged(qn, c, d, k, block):
+    ks = jax.random.split(jax.random.PRNGKey(qn * c), 3)
+    q = jax.random.normal(ks[0], (qn, d))
+    pools = jax.random.normal(ks[1], (qn, c, d))
+    ids = jax.random.randint(ks[2], (qn, c), 0, 10_000).astype(jnp.int32)
+    lens = np.linspace(0, c, qn).astype(int)  # ragged rows incl. empty
+    ids = jnp.where(jnp.arange(c)[None, :] < lens[:, None], ids, -1)
+    d2, oi = ops.l2_topk_masked(q, pools, ids, k=k, block_c=block,
+                                interpret=True)
+    d2r, oir = ref.l2_topk_masked_ref(q, pools, ids, k)
+    np.testing.assert_allclose(d2, d2r, rtol=1e-4, atol=1e-4)
+    for a, b in zip(np.asarray(oi), np.asarray(oir)):
+        assert set(a.tolist()) == set(b.tolist())
+    # short rows end in explicit padding
+    short = np.asarray(oi)[lens < k]
+    assert (short[:, -1] == -1).all() if len(short) else True
+
+
 def test_l2_topk_bf16():
     q = jax.random.normal(jax.random.PRNGKey(0), (8, 64), jnp.bfloat16)
     x = jax.random.normal(jax.random.PRNGKey(1), (512, 64), jnp.bfloat16)

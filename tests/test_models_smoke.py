@@ -9,6 +9,8 @@ from repro.models import forward, init_params
 from repro.training.optimizer import OptimizerConfig, init_state
 from repro.training.train_step import TrainConfig, make_train_step
 
+pytestmark = pytest.mark.slow  # every arch x (forward + train step), minutes
+
 
 def _batch(cfg, b=2, s=32, seed=1):
     ks = jax.random.split(jax.random.PRNGKey(seed), 4)

@@ -8,6 +8,8 @@ from repro.core.search import SearchConfig, search_pag, write_partitions
 from repro.data.vectors import recall_at_k
 from repro.storage.simulator import ComputeModel, ObjectStore, StorageConfig
 
+pytestmark = pytest.mark.slow  # full build->store->serve comparisons, minutes
+
 
 def test_pag_beats_diskann_on_dfs(built_pag, small_ds):
     """Paper Fig 10: on DFS-tier storage, PAG (async, partition fan-out)

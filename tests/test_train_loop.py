@@ -83,8 +83,8 @@ def test_mamba_trains_stably():
 def test_compressed_psum_single_device():
     """shard_map int8 grad all-reduce on a trivial 1-device mesh equals
     identity within the quantization error bound."""
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
+    from repro.distributed.compat import shard_map
     from repro.launch.mesh import make_local_mesh
     from repro.training.compression import compressed_psum
 
