@@ -74,7 +74,40 @@ def _curves(ctx: BenchContext, storage: str, k: int = 10):
     return rows
 
 
+INFLIGHT_SWEEP = (1, 2, 4, 8, 16, 32, 64, None)
+
+
+def _inflight_saturation(ctx: BenchContext, storage: str = "dfs",
+                         k: int = 10):
+    """Bounded fetch concurrency: where does the batched engine's RPC
+    wave saturate? max_inflight=1 degenerates to a serial fetch stream;
+    None is the unlimited wave the simulator modeled before."""
+    ds = ctx.dataset("clustered")
+    pag, _ = ctx.pag("clustered", p=0.2, lam=3.0, redundancy=4)
+    print(f"\n== batched QPS vs max_inflight ({storage}) ==")
+    qps_by_m = {}
+    for m in INFLIGHT_SWEEP:
+        cfg = SearchConfig(L=64, k=k, n_probe_max=32, mode="async",
+                           max_inflight=m)
+        store = ctx.pag_store("clustered", storage, pag, seed=1)
+        ids, _, st = search_pag(pag, ds.d, ds.queries, store, cfg,
+                                n_shards=N_SHARDS)
+        rec = recall_at_k(ids, ds.gt_ids, k)
+        qps_by_m[m] = st.batch_qps()
+        tag = "inf" if m is None else str(m)
+        print(f"  max_inflight={tag:>3s} batch_qps={st.batch_qps():8.0f} "
+              f"recall={rec:.3f}")
+        emit(f"qps_recall/{storage}/max_inflight/{tag}",
+             1e6 / max(st.batch_qps(), 1e-9),
+             f"batch_qps={st.batch_qps():.0f};recall={rec:.3f}")
+    sat = next((m for m in INFLIGHT_SWEEP if m is not None
+                and qps_by_m[m] >= 0.9 * qps_by_m[None]), None)
+    print(f"  >> saturates (>=90% of unlimited) at max_inflight={sat}")
+    emit(f"qps_recall/{storage}/inflight_saturation", 0.0, f"at={sat}")
+
+
 def main(ctx: BenchContext):
+    _inflight_saturation(ctx)
     for storage, fig in (("ssd", "Fig8-disk"), ("mem", "Fig9-memory"),
                          ("dfs", "Fig10-dfs")):
         print(f"\n== {fig}: QPS vs Recall@10 ({storage}) ==")

@@ -15,12 +15,13 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--only", default="",
                     help="comma list: build_time,qps_recall,redundancy,"
-                         "radius_grid,drs_tail,kernels,lm,roofline")
+                         "radius_grid,drs_tail,chaos,kernels,lm,roofline")
     args = ap.parse_args()
 
     from benchmarks import (
         build_time,
         cache_effect,
+        chaos,
         drs_tail,
         kernels_micro,
         lm_step,
@@ -40,6 +41,7 @@ def main() -> None:
         "radius_grid": radius_grid.main,
         "drs_tail": drs_tail.main,
         "cache_effect": cache_effect.main,
+        "chaos": chaos.main,
         "kernels": kernels_micro.main,
         "lm": lm_step.main,
         "roofline": roofline.main,

@@ -44,7 +44,9 @@ class ShardedServing:
     n_shards: int
     dim: int
     prefix: str = "part"
+    replicas: int = 1           # replica layout written by write_partitions
     dead_shards: Set[int] = dataclasses.field(default_factory=set)
+    resilient: Optional[object] = None   # long-lived ResilientStore
 
     def kill_shard(self, shard: int):
         self.dead_shards.add(shard)
@@ -53,6 +55,14 @@ class ShardedServing:
     def revive(self):
         self.dead_shards.clear()
         self.store.revive_all()
+
+    def enable_resilience(self, policy) -> "ShardedServing":
+        """Install a long-lived retry/failover/breaker plane: breaker
+        state persists across searches, so a dead shard stops eating
+        retry budget after a few queries instead of per batch."""
+        from repro.storage.resilience import ResilientStore
+        self.resilient = ResilientStore(self.store, policy)
+        return self
 
     def rebalance(self, new_n_shards: int):
         """Elastic scaling: re-map partitions across a new shard count by
@@ -76,6 +86,10 @@ class ShardedServing:
 
     def search(self, queries: np.ndarray, cfg: SearchConfig,
                compute: Optional[ComputeModel] = None):
+        if self.replicas > 1 and cfg.replicas == 1:
+            cfg = dataclasses.replace(cfg, replicas=self.replicas)
+        if self.resilient is not None and cfg.resilience is None:
+            cfg = dataclasses.replace(cfg, resilience=self.resilient)
         return search_pag(self.pag, self.dim, queries, self.store, cfg,
                           compute=compute, prefix=self.prefix,
                           n_shards=self.n_shards,

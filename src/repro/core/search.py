@@ -43,6 +43,16 @@ Two data-plane engines (``SearchConfig.engine``):
   as hits (see ``PartitionCache.account_shared``) so hit-rate stays
   comparable with the per-query plane.
 * ``scan_block`` — candidate-pool block size of the Pallas scan.
+* ``replicas`` / ``resilience`` — the fault-tolerance plane. With
+  ``replicas=R`` partitions are stored R-way (``write_partitions``)
+  and a ``ResiliencePolicy`` (or a long-lived ``ResilientStore``)
+  turns each partition fetch into a retry/backoff + timeout + replica
+  failover + circuit-breaker chain whose full event-clock cost is
+  charged to the query timeline. Per-query damage is reported in
+  ``SearchStats.degraded`` (``DegradedInfo``: partitions lost,
+  retries, failovers, timeouts, corruptions, breaker skips).
+* ``max_inflight`` — bounds the concurrency of the batched engine's
+  RPC wave (sub-waves on the event clock; queueing charged).
 """
 from __future__ import annotations
 
@@ -55,6 +65,12 @@ import numpy as np
 from repro.core.graph_search import greedy_search
 from repro.core.pag import PAG
 from repro.kernels import ops
+from repro.storage.resilience import (
+    FetchOutcome,
+    ResiliencePolicy,
+    ResilientStore,
+    replica_keys,
+)
 from repro.storage.simulator import (
     ComputeModel,
     ObjectStore,
@@ -67,21 +83,25 @@ ID_SENTINEL = 2 ** 62   # invalid-id marker used during dedup
 
 
 def write_partitions(pag: PAG, x: np.ndarray, store: ObjectStore,
-                     prefix: str = "part", n_shards: int = 1):
+                     prefix: str = "part", n_shards: int = 1,
+                     replicas: int = 1):
     """Materialize per-partition residual objects in the storage layer.
 
     Object = float32 [cnt, 1 + d]: column 0 carries the original id (as a
     bit-cast int), columns 1: the vector. Partitions are round-robined
     over ``n_shards`` logical shards (prefix/<shard>/<pid>) so failure
-    injection can kill a shard (fault-tolerance tests)."""
+    injection can kill a shard (fault-tolerance tests). ``replicas=R``
+    writes R copies per partition: the primary under the legacy key and
+    replica j under ``prefix/<(pid+j)%n_shards>/<pid>/r<j>`` — adjacent
+    shards, so one shard loss never removes every copy (R <= shards)."""
     for pid in range(pag.n_parts):
         cnt = int(pag.pcount[pid])
         ids = pag.plist[pid, :cnt]
         obj = np.zeros((cnt, x.shape[1] + 1), np.float32)
         obj[:, 0] = ids.astype(np.float32)  # exact for ids < 2^24
         obj[:, 1:] = x[ids]
-        shard = pid % n_shards
-        store.put(f"{prefix}/{shard}/{pid}", obj)
+        for key in replica_keys(prefix, pid, n_shards, replicas):
+            store.put(key, obj)
 
 
 @dataclasses.dataclass
@@ -95,6 +115,36 @@ class SearchConfig:
     hedge_after_s: Optional[float] = None  # straggler mitigation
     cache: Optional[object] = None  # PartitionCache (beyond-paper, §V-B)
     scan_block: int = 256       # Pallas pool-scan block size
+    replicas: int = 1           # R-way partition replication
+    # ResiliencePolicy (fresh breaker state per call) or a long-lived
+    # ResilientStore wrapping the same store (serving tier: breakers
+    # persist across batches). None = the bare skip/raise data plane.
+    resilience: Optional[object] = None
+    max_inflight: Optional[int] = None  # bound the batched RPC wave
+
+
+@dataclasses.dataclass
+class DegradedInfo:
+    """Per-query damage report of the fault-tolerance plane."""
+    n_probes_wanted: int = 0    # partitions APP asked for
+    n_probes_lost: int = 0      # ... that no replica could serve
+    retries: int = 0            # same-replica re-attempts (shared fetch
+    failovers: int = 0          # chains charge every prober, like I/O)
+    timeouts: int = 0
+    corruptions: int = 0
+    breaker_skips: int = 0
+    breakers_open: int = 0      # open breakers after the fetch phase
+
+    @property
+    def degraded(self) -> bool:
+        return self.n_probes_lost > 0
+
+    def add_outcome(self, oc: "FetchOutcome"):
+        self.retries += oc.retries
+        self.failovers += oc.failovers
+        self.timeouts += oc.timeouts
+        self.corruptions += oc.corruptions
+        self.breaker_skips += oc.breaker_skips
 
 
 @dataclasses.dataclass
@@ -104,6 +154,16 @@ class SearchStats:
     n_hops: List[int]
     n_distinct_fetches: int = 0   # storage GETs after coalescing + cache
     batch_span_s: float = 0.0     # event-clock makespan of the batch
+    degraded: List[DegradedInfo] = dataclasses.field(default_factory=list)
+
+    def n_degraded_queries(self) -> int:
+        return sum(1 for d in self.degraded if d.degraded)
+
+    def total_retries(self) -> int:
+        return sum(d.retries for d in self.degraded)
+
+    def total_failovers(self) -> int:
+        return sum(d.failovers for d in self.degraded)
 
     def qps(self) -> float:
         lat = np.asarray(self.latencies_s)
@@ -180,14 +240,33 @@ def _scan_pools(queries: np.ndarray, pool_ids: List[np.ndarray],
     return np.asarray(ids).astype(np.int64), np.asarray(d2)
 
 
-def _fetch_batched(probes_all: List[List[int]], key_of, store: ObjectStore,
-                   cfg: SearchConfig, dead_shard_fallback: bool
+def _resolve_resilient(store: ObjectStore, cfg: SearchConfig
+                       ) -> Optional[ResilientStore]:
+    """cfg.resilience: None | ResiliencePolicy (fresh wrapper per call)
+    | a long-lived ResilientStore (must wrap the same store)."""
+    r = cfg.resilience
+    if r is None:
+        return None
+    if isinstance(r, ResilientStore):
+        if r.store is not store:
+            raise ValueError("cfg.resilience wraps a different store")
+        return r
+    if isinstance(r, ResiliencePolicy):
+        return ResilientStore(store, r)
+    raise TypeError(f"cfg.resilience: {type(r)!r}")
+
+
+def _fetch_batched(probes_all: List[List[int]], rkeys_of, store: ObjectStore,
+                   resilient: Optional[ResilientStore], cfg: SearchConfig,
+                   dead_shard_fallback: bool
                    ) -> Tuple[Dict[int, np.ndarray], Dict[int, float],
-                              Dict[int, List[int]], List[int], int]:
+                              Dict[int, List[int]], List[int], int,
+                              Dict[int, FetchOutcome]]:
     """Coalesce partition probes across the batch: one cache pass + one
-    concurrent get_many wave over the distinct partitions. Returns
-    (objs, latency-per-pid, probers-per-pid, first-probe order,
-    n_store_fetches)."""
+    concurrent wave over the distinct partitions (get_many, or replicated
+    fetch chains when resilience is on). Returns (objs, latency-per-pid,
+    probers-per-pid, first-probe order, n_store_fetches,
+    fetch-outcome-per-pid)."""
     order: List[int] = []
     probers: Dict[int, List[int]] = {}
     for qi, probes in enumerate(probes_all):
@@ -197,8 +276,12 @@ def _fetch_batched(probes_all: List[List[int]], key_of, store: ObjectStore,
                 order.append(pid)
             probers[pid].append(qi)
 
+    def key_of(pid: int) -> str:
+        return rkeys_of(pid)[0]
+
     objs: Dict[int, np.ndarray] = {}
     lat: Dict[int, float] = {}
+    outcomes: Dict[int, FetchOutcome] = {}
     to_fetch: List[int] = []
     for pid in order:
         cached = cfg.cache.get(key_of(pid)) if cfg.cache is not None \
@@ -208,23 +291,48 @@ def _fetch_batched(probes_all: List[List[int]], key_of, store: ObjectStore,
         else:
             to_fetch.append(pid)
 
-    fetched = store.get_many(
-        [key_of(pid) for pid in to_fetch],
-        hedge_after_s=cfg.hedge_after_s,
-        on_missing="skip" if dead_shard_fallback else "raise")
-    for pid in to_fetch:
-        got = fetched.get(key_of(pid))
-        if got is None:
-            continue  # dead shard: degraded, skip its partition
-        objs[pid], lat[pid] = got
+    if resilient is not None:
+        waves = resilient.get_many_replicated(
+            {pid: rkeys_of(pid) for pid in to_fetch},
+            hedge_after_s=cfg.hedge_after_s,
+            max_inflight=cfg.max_inflight)
+        n_store = 0
+        for pid in to_fetch:
+            oc = waves[pid]
+            outcomes[pid] = oc
+            if oc.ok:
+                objs[pid], lat[pid] = oc.value, oc.elapsed_s
+                n_store += 1
+            elif not dead_shard_fallback:
+                raise KeyError(f"partition lost: {key_of(pid)}")
+    else:
+        fetched = store.get_many(
+            [key_of(pid) for pid in to_fetch],
+            hedge_after_s=cfg.hedge_after_s,
+            on_missing="skip" if dead_shard_fallback else "raise",
+            max_inflight=cfg.max_inflight)
+        for pid in to_fetch:
+            got = fetched.get(key_of(pid))
+            if got is None:
+                outcomes[pid] = FetchOutcome()  # dead shard: skipped
+                continue
+            objs[pid], lat[pid] = got
+            outcomes[pid] = FetchOutcome(
+                value=got[0], elapsed_s=got[1], ok=True, replica_used=0)
+        n_store = len(fetched)
     if cfg.cache is not None:
-        cfg.cache.put_many({key_of(pid): objs[pid] for pid in to_fetch
-                            if pid in objs})
+        # corrupted payloads must never be admitted to the cache: the
+        # resilient chain already verified survivors; the bare plane
+        # checks the put-time checksum here at admission
+        cfg.cache.put_many({
+            key_of(pid): objs[pid] for pid in to_fetch
+            if pid in objs and (resilient is not None
+                                or store.verify(key_of(pid), objs[pid]))})
         for pid in order:
             if pid in objs:
                 cfg.cache.account_shared(key_of(pid),
                                          len(probers[pid]) - 1)
-    return objs, lat, probers, order, len(fetched)
+    return objs, lat, probers, order, n_store, outcomes
 
 
 def search_pag(pag: PAG, x_dim: int, queries: np.ndarray,
@@ -258,20 +366,34 @@ def search_pag(pag: PAG, x_dim: int, queries: np.ndarray,
         for qi in range(q_count)
     ]
 
-    def key_of(pid: int) -> str:
-        return f"{prefix}/{pid % n_shards}/{pid}"
+    def rkeys_of(pid: int) -> List[str]:
+        return replica_keys(prefix, pid, n_shards, cfg.replicas)
 
+    resilient = _resolve_resilient(store, cfg)
     timelines = [QueryTimeline() for _ in range(q_count)]
+    degraded = [DegradedInfo(n_probes_wanted=len(probes_all[qi]))
+                for qi in range(q_count)]
     for qi in range(q_count):
         timelines[qi].add_compute(traversal_s[qi])
 
     if cfg.engine == "batched":
-        objs, lat, probers, order, n_store = _fetch_batched(
-            probes_all, key_of, store, cfg, dead_shard_fallback)
+        objs, lat, probers, order, n_store, outcomes = _fetch_batched(
+            probes_all, rkeys_of, store, resilient, cfg,
+            dead_shard_fallback)
         # per-query accounting: every prober is charged the shared
-        # fetch's latency and its own scan of the partition
+        # fetch chain's cost (latency incl. retries/failovers) and its
+        # own scan of the partition; lost partitions are reported
         for pid in order:
+            oc = outcomes.get(pid)
+            for qi in probers[pid]:
+                if oc is not None:
+                    degraded[qi].add_outcome(oc)
+                if pid not in objs:
+                    degraded[qi].n_probes_lost += 1
             if pid not in objs:
+                if oc is not None and oc.elapsed_s > 0:
+                    for qi in probers[pid]:  # failed chain burned budget
+                        timelines[qi].issue_io(oc.elapsed_s, 0.0)
                 continue
             scan = compute.scan(objs[pid].shape[0], x_dim)
             for qi in probers[pid]:
@@ -283,9 +405,15 @@ def search_pag(pag: PAG, x_dim: int, queries: np.ndarray,
         for qi in range(q_count):
             bt.add_compute(traversal_s[qi])
             for pid in probes_all[qi]:
-                if first_prober[pid] == qi and pid in objs:
+                if first_prober[pid] != qi:
+                    continue
+                if pid in objs:
                     bt.issue_io(lat[pid], compute.scan_batched(
                         objs[pid].shape[0], x_dim, len(probers[pid])))
+                else:
+                    oc = outcomes.get(pid)
+                    if oc is not None and oc.elapsed_s > 0:
+                        bt.issue_io(oc.elapsed_s, 0.0)  # burned budget
         batch_span = bt.finish_async() if cfg.mode == "async" \
             else bt.finish_sync()
         n_distinct = n_store
@@ -295,11 +423,25 @@ def search_pag(pag: PAG, x_dim: int, queries: np.ndarray,
         n_distinct = 0
         for qi in range(q_count):
             for pid in probes_all[qi]:
-                key = key_of(pid)
+                key = rkeys_of(pid)[0]
                 cached = cfg.cache.get(key) if cfg.cache is not None \
                     else None
                 if cached is not None:
                     obj, io_lat = cached, 0.0  # local-memory hit
+                elif resilient is not None:
+                    oc = resilient.get_replicated(
+                        rkeys_of(pid), hedge_after_s=cfg.hedge_after_s)
+                    degraded[qi].add_outcome(oc)
+                    if not oc.ok:
+                        degraded[qi].n_probes_lost += 1
+                        timelines[qi].issue_io(oc.elapsed_s, 0.0)
+                        if dead_shard_fallback:
+                            continue  # degraded: budget burned, no data
+                        raise KeyError(f"partition lost: {key}")
+                    obj, io_lat = oc.value, oc.elapsed_s
+                    n_distinct += 1
+                    if cfg.cache is not None:
+                        cfg.cache.put(key, obj)
                 else:
                     try:
                         if cfg.hedge_after_s is not None:
@@ -308,18 +450,24 @@ def search_pag(pag: PAG, x_dim: int, queries: np.ndarray,
                         else:
                             obj, io_lat = store.get(key)
                     except KeyError:
+                        degraded[qi].n_probes_lost += 1
                         if dead_shard_fallback:
                             continue  # degraded: skip dead partition
                         raise
                     n_distinct += 1
-                    if cfg.cache is not None:
-                        cfg.cache.put(key, obj)
+                    if cfg.cache is not None and store.verify(key, obj):
+                        cfg.cache.put(key, obj)  # no corrupt admission
                 objs[pid] = obj
                 timelines[qi].issue_io(io_lat,
                                        compute.scan(obj.shape[0], x_dim))
         batch_span = None  # serial stream: filled from latencies below
     else:
         raise ValueError(f"unknown engine: {cfg.engine!r}")
+
+    if resilient is not None:
+        n_open = resilient.n_open_breakers()
+        for d in degraded:
+            d.breakers_open = n_open
 
     # candidate pools: aggregation points on the beam (they are dataset
     # points) + residuals of the available probed partitions, deduped by
@@ -346,7 +494,8 @@ def search_pag(pag: PAG, x_dim: int, queries: np.ndarray,
     out_ids, out_d2 = _scan_pools(queries.astype(np.float32), pool_ids,
                                   pool_vecs, cfg.k, cfg.scan_block)
 
-    stats = SearchStats([], [], [], n_distinct_fetches=n_distinct)
+    stats = SearchStats([], [], [], n_distinct_fetches=n_distinct,
+                        degraded=degraded)
     for qi in range(q_count):
         tl = timelines[qi]
         lat_q = tl.finish_async() if cfg.mode == "async" \

@@ -77,7 +77,12 @@ class AnnsFrontend:
     dedup). ``submit`` returns a ticket; ``flush`` runs the batch and
     returns per-ticket ``(ids, d2, latency_s)``. An explicit
     ``max_batch`` caps request latency under heavy load: ``submit``
-    auto-flushes a full buffer into ``results``."""
+    auto-flushes a full buffer into ``results``.
+
+    Fault-tolerance plane: each flushed ticket also gets a per-query
+    ``DegradedInfo`` in ``self.degraded`` (partitions lost, retries,
+    failovers, breaker state) so a caller can tell a full answer from
+    a degraded one and e.g. re-issue or annotate it."""
 
     def __init__(self, serving, cfg, max_batch: int = 64,
                  compute=None):
@@ -86,6 +91,7 @@ class AnnsFrontend:
         self.max_batch = max_batch
         self.compute = compute
         self.results: Dict[int, Tuple[np.ndarray, np.ndarray, float]] = {}
+        self.degraded: Dict[int, object] = {}   # ticket -> DegradedInfo
         self._pending: List[Tuple[int, np.ndarray]] = []
         self._next_ticket = 0
 
@@ -110,5 +116,7 @@ class AnnsFrontend:
         for row, ticket in enumerate(tickets):
             self.results[ticket] = (ids[row], d2[row],
                                     stats.latencies_s[row])
+            if stats.degraded:
+                self.degraded[ticket] = stats.degraded[row]
         self.last_stats = stats
         return self.results

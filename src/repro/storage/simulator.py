@@ -12,16 +12,80 @@ with parameters for the paper's Table I tiers:
     dfs   0.1–10 ms heavy-tailed        (Pangu-like DFS)
 
 Also provides: failure injection (dead shards -> KeyError, the router
-degrades gracefully), hedged requests (straggler mitigation: duplicate
-issue at the p95 timeout, take the min — the classic tail-taming trick),
-and an event-clock used by the async search to overlap compute with I/O.
+degrades gracefully), a pluggable ``FaultPlan`` (transient errors,
+timeout spikes, slow shards, flapping windows, payload corruption with
+per-object checksums computed at ``put`` time), hedged requests
+(straggler mitigation: duplicate issue at the p95 timeout, take the min
+— the classic tail-taming trick), bounded fetch concurrency
+(``get_many(max_inflight=...)`` models a sliding-window RPC wave), and
+an event-clock used by the async search to overlap compute with I/O.
+
+Fault determinism: every injected fault is a pure function of
+``(plan.seed, key, attempt)`` — NOT of call order — so the batched and
+per-query data planes observe identical fault outcomes for the same
+keys (tests assert identical search results under the same plan).
+``sticky=True`` drops the attempt index from the hash: the fault then
+models a damaged replica object (only failover to another replica
+helps), not a network blip (which a same-replica retry fixes).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, List, Optional, Tuple
+import hashlib
+import heapq
+import zlib
+from typing import Dict, Iterable, List, Mapping, Optional, Tuple
 
 import numpy as np
+
+
+class TransientError(KeyError):
+    """A retryable storage error (network blip, flapping shard). Subclass
+    of KeyError so fault-unaware callers degrade exactly like the
+    dead-shard path: skip the partition (the baseline the resilience
+    layer is measured against)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Declarative fault injection for ``ObjectStore``.
+
+    * ``transient_p`` — probability a GET raises ``TransientError``.
+    * ``sticky`` — hash faults per key instead of per (key, attempt):
+      transient/corruption faults persist across retries of the same
+      replica object and only replica failover recovers.
+    * ``timeout_p`` / ``timeout_spike_s`` — probability a GET's latency
+      gains a spike far beyond any sane per-request deadline (the
+      resilient layer cancels at its timeout; a plain caller eats it).
+    * ``slow_prefixes`` — latency multiplier per key prefix (brown-out /
+      degraded shard).
+    * ``flap_windows`` — prefix -> (t_start, t_end): GETs issued with
+      ``now_s`` inside the window raise ``TransientError``; the shard
+      recovers by itself afterwards (retry-after-backoff territory).
+    * ``corrupt_p`` — probability the returned payload is corrupted
+      (stored object untouched); detectable via ``ObjectStore.verify``
+      against the checksum recorded at ``put`` time.
+    """
+    transient_p: float = 0.0
+    sticky: bool = False
+    timeout_p: float = 0.0
+    timeout_spike_s: float = 1.0
+    corrupt_p: float = 0.0
+    slow_prefixes: Mapping[str, float] = \
+        dataclasses.field(default_factory=dict)
+    flap_windows: Mapping[str, Tuple[float, float]] = \
+        dataclasses.field(default_factory=dict)
+    seed: int = 0
+
+    def _u(self, key: str, attempt: int, salt: str) -> float:
+        """Deterministic uniform in [0, 1) from (seed, key[, attempt]).
+        blake2b, not crc32: CRC is linear, so single-character changes
+        (e.g. the attempt index) XOR a constant into the hash and
+        correlate decisions across attempts."""
+        a = -1 if self.sticky else attempt
+        h = hashlib.blake2b(f"{self.seed}:{salt}:{key}:{a}".encode(),
+                            digest_size=8).digest()
+        return int.from_bytes(h, "little") / 2.0 ** 64
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,9 +114,12 @@ class StorageConfig:
 class ObjectStore:
     """Key -> numpy array object store with simulated latencies."""
 
-    def __init__(self, cfg: StorageConfig):
+    def __init__(self, cfg: StorageConfig,
+                 fault_plan: Optional[FaultPlan] = None):
         self.cfg = cfg
+        self.fault_plan = fault_plan
         self._data: Dict[str, np.ndarray] = {}
+        self._crc: Dict[str, int] = {}
         self._rng = np.random.default_rng(cfg.seed)
         self._dead_prefixes: List[str] = []
         self.n_gets = 0
@@ -61,7 +128,20 @@ class ObjectStore:
 
     # ------------------------------------------------------------- admin
     def put(self, key: str, value: np.ndarray):
-        self._data[key] = np.ascontiguousarray(value)
+        v = np.ascontiguousarray(value)
+        self._data[key] = v
+        self._crc[key] = zlib.crc32(v.tobytes())
+
+    def set_fault_plan(self, plan: Optional[FaultPlan]):
+        self.fault_plan = plan
+
+    def verify(self, key: str, value: np.ndarray) -> bool:
+        """Check ``value`` against the checksum recorded at put time.
+        Unknown keys verify trivially (no checksum on record)."""
+        crc = self._crc.get(key)
+        if crc is None:
+            return True
+        return zlib.crc32(np.ascontiguousarray(value).tobytes()) == crc
 
     def keys(self):
         return self._data.keys()
@@ -86,49 +166,113 @@ class ObjectStore:
             lat += self._rng.lognormal(c.jitter_mu, c.jitter_sigma)
         return lat
 
-    def get(self, key: str) -> Tuple[np.ndarray, float]:
-        """Returns (value, simulated_latency_seconds)."""
+    def _corrupted(self, key: str, v: np.ndarray) -> np.ndarray:
+        """Deterministic payload corruption: one element of a COPY is
+        blown up; the stored object (and its checksum) are untouched."""
+        bad = np.array(v, copy=True)
+        if bad.size:
+            h = zlib.crc32(f"{self.fault_plan.seed}:flip:{key}".encode())
+            # finite garbage: wrong enough to poison ids/distances,
+            # still castable (no overflow warnings downstream)
+            bad.reshape(-1)[h % bad.size] = np.float32(2 ** 30)
+        return bad
+
+    def get(self, key: str, now_s: float = 0.0, attempt: int = 0
+            ) -> Tuple[np.ndarray, float]:
+        """Returns (value, simulated_latency_seconds).
+
+        ``now_s`` is the caller's event-clock time (flap windows are
+        evaluated against it); ``attempt`` is the caller's retry index
+        for this key (advances the deterministic fault stream unless the
+        plan is sticky)."""
         for p in self._dead_prefixes:
             if key.startswith(p):
                 raise KeyError(f"shard down: {key}")
+        plan = self.fault_plan
+        if plan is not None:
+            for pref, (t0, t1) in plan.flap_windows.items():
+                if key.startswith(pref) and t0 <= now_s < t1:
+                    raise TransientError(f"shard flapping: {key}")
+            if plan.transient_p > 0 and \
+                    plan._u(key, attempt, "err") < plan.transient_p:
+                raise TransientError(f"transient error: {key}")
         v = self._data[key]
         self.n_gets += 1
         self.bytes_fetched += v.nbytes
-        return v, self._latency(v.nbytes)
+        lat = self._latency(v.nbytes)
+        if plan is not None:
+            for pref, mult in plan.slow_prefixes.items():
+                if key.startswith(pref):
+                    lat *= mult
+            if plan.timeout_p > 0 and \
+                    plan._u(key, attempt, "tmo") < plan.timeout_p:
+                lat += plan.timeout_spike_s
+            if plan.corrupt_p > 0 and \
+                    plan._u(key, attempt, "crp") < plan.corrupt_p:
+                v = self._corrupted(key, v)
+        return v, lat
 
-    def get_hedged(self, key: str, hedge_after_s: float) -> Tuple[
+    def get_hedged(self, key: str, hedge_after_s: float,
+                   now_s: float = 0.0, attempt: int = 0) -> Tuple[
             np.ndarray, float]:
-        """Straggler mitigation: duplicate request after hedge_after_s."""
-        v, lat1 = self.get(key)
+        """Straggler mitigation: duplicate request after hedge_after_s.
+        The duplicate is a real second RPC and is counted in
+        ``n_gets``/``bytes_fetched`` (it consumes backend capacity even
+        when the first copy wins); only its latency is redrawn."""
+        v, lat1 = self.get(key, now_s=now_s, attempt=attempt)
         if lat1 <= hedge_after_s:
             return v, lat1
+        self.n_gets += 1
+        self.bytes_fetched += v.nbytes
         lat2 = hedge_after_s + self._latency(v.nbytes)
         return v, min(lat1, lat2)
 
     def get_many(self, keys: Iterable[str],
                  hedge_after_s: Optional[float] = None,
-                 on_missing: str = "raise"
+                 on_missing: str = "raise",
+                 max_inflight: Optional[int] = None,
+                 now_s: float = 0.0
                  ) -> Dict[str, Tuple[np.ndarray, float]]:
         """Coalesced batch fetch: one RPC wave, every key issued
         concurrently (latencies drawn independently per key; hedging
         applied per key as in get_hedged). Duplicate keys are fetched
         once. ``on_missing``: "raise" propagates the KeyError of a dead
         or absent key, "skip" omits it from the result (the degraded
-        dead-shard path)."""
+        dead-shard path).
+
+        ``max_inflight`` bounds the concurrency of the wave: at most
+        that many RPCs are outstanding; further keys issue as slots
+        free (sliding window on the event clock). Returned latencies
+        are then *effective* — queueing delay included — measured from
+        the wave start. ``None`` keeps the unlimited wave."""
         if on_missing not in ("raise", "skip"):
             raise ValueError(on_missing)
+        if max_inflight is not None and max_inflight < 1:
+            raise ValueError(f"max_inflight must be >= 1: {max_inflight}")
         out: Dict[str, Tuple[np.ndarray, float]] = {}
+        inflight: List[float] = []   # completion-time heap
         for key in keys:
             if key in out:
                 continue
+            issue = 0.0
+            if max_inflight is not None and len(inflight) >= max_inflight:
+                issue = heapq.heappop(inflight)
             try:
                 if hedge_after_s is not None:
-                    out[key] = self.get_hedged(key, hedge_after_s)
+                    v, lat = self.get_hedged(key, hedge_after_s,
+                                             now_s=now_s + issue)
                 else:
-                    out[key] = self.get(key)
+                    v, lat = self.get(key, now_s=now_s + issue)
             except KeyError:
+                if max_inflight is not None:  # error still held a slot
+                    heapq.heappush(inflight,
+                                   issue + self.cfg.base_latency_s)
                 if on_missing == "raise":
                     raise
+                continue
+            if max_inflight is not None:
+                heapq.heappush(inflight, issue + lat)
+            out[key] = (v, issue + lat)
         self.n_batch_gets += 1
         return out
 

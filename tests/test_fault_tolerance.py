@@ -1,11 +1,14 @@
 """Fault tolerance: shard loss degrades recall gracefully (no crash),
-hedged fetches tame the p99 tail, elastic router behavior."""
+hedged fetches tame the p99 tail, cache-vs-failure interaction,
+smooth degraded recall, elastic router behavior."""
 import numpy as np
+import pytest
 
 from repro.core.distributed import ShardedServing
-from repro.core.search import SearchConfig, write_partitions
+from repro.core.search import SearchConfig, search_pag, write_partitions
 from repro.data.vectors import recall_at_k
-from repro.storage.simulator import ObjectStore, StorageConfig
+from repro.storage.cache import PartitionCache
+from repro.storage.simulator import FaultPlan, ObjectStore, StorageConfig
 
 
 def _serving(built_pag, ds, kind="mem", n_shards=4, seed=0):
@@ -43,6 +46,83 @@ def test_redundancy_absorbs_failures(built_pag, small_ds):
     ids, _, _ = srv.search(small_ds.queries, cfg)
     degraded = recall_at_k(ids, small_ds.gt_ids, 10)
     assert degraded > 0.75 * 0.9  # redundant copies land on other shards
+
+
+def test_cache_hit_masks_dead_shard(built_pag, small_ds):
+    """A PartitionCache hit can serve a partition whose shard has since
+    died — that's a feature: warm caches carry recall through an
+    outage."""
+    srv = _serving(built_pag, small_ds)
+    cache = PartitionCache(10 ** 9)
+    cfg = SearchConfig(L=64, k=10, n_probe_max=64, cache=cache)
+    cfg_nocache = SearchConfig(L=64, k=10, n_probe_max=64)
+    ids_base, _, _ = srv.search(small_ds.queries, cfg)  # warms the cache
+    base = recall_at_k(ids_base, small_ds.gt_ids, 10)
+
+    srv.kill_shard(0)
+    ids_cold, _, st_cold = srv.search(small_ds.queries, cfg_nocache)
+    rec_cold = recall_at_k(ids_cold, small_ds.gt_ids, 10)
+    ids_warm, _, st_warm = srv.search(small_ds.queries, cfg)
+    rec_warm = recall_at_k(ids_warm, small_ds.gt_ids, 10)
+
+    assert np.array_equal(ids_warm, ids_base)   # outage fully masked
+    assert rec_warm >= base - 1e-9
+    assert rec_warm >= rec_cold                 # and beats the cold path
+    assert sum(d.n_probes_lost for d in st_warm.degraded) \
+        < sum(d.n_probes_lost for d in st_cold.degraded)
+
+
+@pytest.mark.parametrize("engine", ["batched", "per_query"])
+def test_corrupted_objects_never_cached(built_pag, small_ds, engine):
+    """Payload corruption detected via the put-time checksum must not be
+    admitted to the cache (a cached corrupt object would poison every
+    later hit)."""
+    plan = FaultPlan(corrupt_p=0.35, sticky=True, seed=2)
+    store = ObjectStore(StorageConfig.preset("mem"), fault_plan=plan)
+    write_partitions(built_pag, small_ds.base, store, n_shards=4)
+    cache = PartitionCache(10 ** 9)
+    cfg = SearchConfig(L=64, k=10, n_probe_max=64, cache=cache,
+                       engine=engine)
+    search_pag(built_pag, small_ds.d, small_ds.queries, store, cfg,
+               n_shards=4)
+    assert cache._data                        # clean objects were cached
+    assert all(store.verify(key, val) for key, val in cache._data.items())
+    # and with sticky corruption some fetches were corrupt for sure
+    n_parts = built_pag.n_parts
+    assert any(not store.verify(f"part/{pid % 4}/{pid}",
+                                store.get(f"part/{pid % 4}/{pid}")[0])
+               for pid in range(n_parts))
+
+
+def test_recall_degrades_smoothly_with_dead_shards(built_pag, small_ds):
+    """on_missing="skip" with F dead shards out of S: recall stays >=
+    (1 - F/S) * baseline (redundant copies usually do much better), and
+    dead_shard_fallback=False raises instead of silently degrading."""
+    S = 4
+    srv = _serving(built_pag, small_ds, n_shards=S)
+    cfg = SearchConfig(L=64, k=10, n_probe_max=64)
+    ids, _, _ = srv.search(small_ds.queries, cfg)
+    base = recall_at_k(ids, small_ds.gt_ids, 10)
+    prev = base
+    for F in (1, 2, 3):
+        srv.kill_shard(F - 1)
+        ids_f, _, st = srv.search(small_ds.queries, cfg)
+        rec = recall_at_k(ids_f, small_ds.gt_ids, 10)
+        assert rec >= (1 - F / S) * base - 1e-9, (F, base, rec)
+        assert rec <= prev + 1e-9   # monotone in the damage
+        assert st.n_degraded_queries() > 0
+        prev = rec
+    srv.revive()
+
+    store = ObjectStore(StorageConfig.preset("mem"))
+    write_partitions(built_pag, small_ds.base, store, n_shards=S)
+    store.kill_prefix("part/0/")
+    for engine in ("batched", "per_query"):
+        with pytest.raises(KeyError):
+            search_pag(built_pag, small_ds.d, small_ds.queries, store,
+                       SearchConfig(L=64, k=10, n_probe_max=64,
+                                    engine=engine),
+                       n_shards=S, dead_shard_fallback=False)
 
 
 def test_hedging_improves_tail(built_pag, small_ds):

@@ -1,0 +1,288 @@
+"""Fault-injection plane (FaultPlan / checksums) and recovery policy
+(ResilientStore: retry/backoff, timeouts, deadlines, replica failover,
+circuit breakers) + bounded-concurrency get_many."""
+import numpy as np
+import pytest
+
+from repro.storage.resilience import (
+    CircuitBreaker,
+    ResiliencePolicy,
+    ResilientStore,
+    replica_keys,
+    shard_of,
+)
+from repro.storage.simulator import (
+    FaultPlan,
+    ObjectStore,
+    StorageConfig,
+    TransientError,
+)
+
+FIXED = StorageConfig("fix", 1e-3, 0.0, 0.0, 0.0, 0)  # 1 ms flat, no jitter
+
+
+def _store(plan=None, cfg=FIXED, n=8):
+    s = ObjectStore(cfg, fault_plan=plan)
+    for i in range(n):
+        s.put(f"p/{i}/obj", np.full(16, i, np.float32))
+    return s
+
+
+# -------------------------------------------------------------- fault plan
+
+def test_fault_plan_deterministic_across_stores():
+    plan = FaultPlan(transient_p=0.3, seed=9)
+    outcomes = []
+    for _ in range(2):
+        s = _store(plan, n=32)
+        got = []
+        for i in range(32):
+            try:
+                s.get(f"p/{i}/obj")
+                got.append(True)
+            except TransientError:
+                got.append(False)
+        outcomes.append(got)
+    assert outcomes[0] == outcomes[1]      # pure function of (seed, key)
+    assert not all(outcomes[0]) and any(outcomes[0])
+
+
+def test_sticky_vs_attempt_faults():
+    """Non-sticky faults clear on a later attempt for some key; sticky
+    faults persist across every attempt of the same key."""
+    blip = FaultPlan(transient_p=0.5, sticky=False, seed=2)
+    s = _store(blip, n=64)
+
+    def fails(key, attempt):
+        try:
+            s.get(key, attempt=attempt)
+            return False
+        except TransientError:
+            return True
+
+    recovered = [k for k in (f"p/{i}/obj" for i in range(64))
+                 if fails(k, 0) and not fails(k, 1)]
+    assert recovered  # a retry fixes a blip for at least one key
+
+    sticky = FaultPlan(transient_p=0.5, sticky=True, seed=2)
+    s2 = _store(sticky, n=64)
+    for i in range(64):
+        key = f"p/{i}/obj"
+        first = None
+        for a in range(4):
+            try:
+                s2.get(key, attempt=a)
+                outcome = False
+            except TransientError:
+                outcome = True
+            first = outcome if first is None else first
+            assert outcome == first   # persists across attempts
+
+
+def test_flap_window_recovers():
+    plan = FaultPlan(flap_windows={"p/1/": (0.0, 1.0)})
+    s = _store(plan)
+    with pytest.raises(TransientError):
+        s.get("p/1/obj", now_s=0.5)
+    s.get("p/1/obj", now_s=1.5)      # shard recovered by itself
+    s.get("p/2/obj", now_s=0.5)      # other shards never flapped
+
+
+def test_slow_prefix_multiplies_latency():
+    plan = FaultPlan(slow_prefixes={"p/3/": 10.0})
+    s = _store(plan)
+    _, fast = s.get("p/2/obj")
+    _, slow = s.get("p/3/obj")
+    assert slow == pytest.approx(10 * fast)
+
+
+def test_timeout_spike_and_corruption_detection():
+    plan = FaultPlan(timeout_p=1.0, timeout_spike_s=2.0)
+    s = _store(plan)
+    _, lat = s.get("p/0/obj")
+    assert lat > 2.0                  # spike far beyond any deadline
+
+    planc = FaultPlan(corrupt_p=1.0, sticky=True)
+    sc = _store(planc)
+    v, _ = sc.get("p/0/obj")
+    assert not sc.verify("p/0/obj", v)          # checksum catches it
+    assert np.array_equal(sc._data["p/0/obj"],  # stored object untouched
+                          np.full(16, 0, np.float32))
+    clean = _store()
+    v2, _ = clean.get("p/0/obj")
+    assert clean.verify("p/0/obj", v2)
+
+
+def test_transient_is_keyerror_subclass():
+    """Fault-unaware callers degrade exactly like the dead-shard path."""
+    assert issubclass(TransientError, KeyError)
+    s = _store(FaultPlan(transient_p=1.0))
+    out = s.get_many(["p/0/obj", "p/1/obj"], on_missing="skip")
+    assert out == {}
+
+
+# ------------------------------------------------------- replica placement
+
+def test_replica_keys_distinct_shards():
+    keys = replica_keys("part", 5, n_shards=4, replicas=3)
+    assert keys[0] == "part/1/5"                 # legacy primary key
+    assert keys[1] == "part/2/5/r1"
+    assert keys[2] == "part/3/5/r2"
+    assert len({shard_of(k) for k in keys}) == 3  # one shard != all copies
+    assert replica_keys("part", 5, 4, 1) == ["part/1/5"]
+
+
+# ------------------------------------------------------------ resilience
+
+def _policy(**kw):
+    kw.setdefault("base_backoff_s", 1e-3)
+    kw.setdefault("request_timeout_s", 0.05)
+    kw.setdefault("deadline_s", 0.5)
+    return ResiliencePolicy(**kw)
+
+
+def _replicated_store(plan=None, replicas=2, n_shards=4, pids=8):
+    s = ObjectStore(FIXED, fault_plan=plan)
+    for pid in range(pids):
+        for key in replica_keys("part", pid, n_shards, replicas):
+            s.put(key, np.full(16, pid, np.float32))
+    return s
+
+
+def test_retry_recovers_blip_and_charges_backoff():
+    plan = FaultPlan(transient_p=0.6, sticky=False, seed=3)
+    s = _replicated_store(plan, replicas=1)
+    rs = ResilientStore(s, _policy(max_attempts_per_replica=4))
+    saw_retry = False
+    for pid in range(8):
+        oc = rs.get_replicated(replica_keys("part", pid, 4, 1))
+        assert oc.ok
+        assert np.array_equal(oc.value, np.full(16, pid, np.float32))
+        if oc.retries:
+            saw_retry = True
+            # elapsed covers failed attempt cost + backoff + final get
+            assert oc.elapsed_s > 1e-3 + rs.policy.base_backoff_s * 0.8
+    assert saw_retry and rs.n_retries > 0
+
+
+def test_failover_on_sticky_fault():
+    s = _replicated_store(replicas=2)
+    s.kill_prefix("part/1/5")         # primary copy of pid 5 is gone
+    rs = ResilientStore(s, _policy(max_attempts_per_replica=1))
+    oc = rs.get_replicated(replica_keys("part", 5, 4, 2))
+    assert oc.ok and oc.replica_used == 1 and oc.failovers == 1
+    assert np.array_equal(oc.value, np.full(16, 5, np.float32))
+
+    rs1 = ResilientStore(s, _policy(max_attempts_per_replica=1))
+    oc1 = rs1.get_replicated(replica_keys("part", 5, 4, 1))  # R=1: dead
+    assert not oc1.ok and oc1.value is None
+
+
+def test_corruption_fails_over_to_clean_replica():
+    """Sticky corruption on the primary: checksum detects it, the chain
+    fails over and returns the clean copy."""
+    plan = FaultPlan(corrupt_p=0.45, sticky=True, seed=14)
+    s = _replicated_store(plan, replicas=2)
+    rs = ResilientStore(s, _policy(max_attempts_per_replica=1))
+    hit = False
+    for pid in range(8):
+        oc = rs.get_replicated(replica_keys("part", pid, 4, 2))
+        assert oc.ok
+        assert np.array_equal(oc.value, np.full(16, pid, np.float32))
+        if oc.corruptions:
+            hit = True
+            assert oc.failovers >= 1
+    assert hit and rs.n_corruptions > 0
+
+
+def test_timeout_then_deadline_giveup():
+    plan = FaultPlan(timeout_p=1.0, timeout_spike_s=10.0)
+    s = _replicated_store(plan, replicas=2)
+    pol = _policy(max_attempts_per_replica=2, request_timeout_s=0.02,
+                  deadline_s=0.05)
+    rs = ResilientStore(s, pol)
+    oc = rs.get_replicated(replica_keys("part", 0, 4, 2))
+    assert not oc.ok and oc.timeouts >= 1
+    assert oc.elapsed_s <= pol.deadline_s + 1e-12   # budget respected
+    assert rs.n_timeouts >= 1 and rs.n_deadline_giveups >= 1
+
+
+def test_circuit_breaker_state_machine():
+    br = CircuitBreaker(fail_threshold=2, cooldown_requests=3)
+    assert br.state == br.CLOSED and br.allow()
+    br.record_failure()
+    assert br.state == br.CLOSED
+    br.record_failure()
+    assert br.state == br.OPEN and br.n_trips == 1
+    assert not br.allow() and not br.allow() and not br.allow()
+    assert br.allow()                 # cooldown spent -> half-open probe
+    assert br.state == br.HALF_OPEN
+    br.record_failure()               # probe failed -> re-open instantly
+    assert br.state == br.OPEN and br.n_trips == 2
+    for _ in range(3):
+        assert not br.allow()
+    assert br.allow()
+    br.record_success()               # probe succeeded -> closed
+    assert br.state == br.CLOSED and br.allow()
+
+
+def test_breaker_shields_dead_shard():
+    """A dead shard trips its breaker after threshold failures; later
+    chains skip it without burning retry budget, and the breaker
+    half-opens after the cooldown."""
+    s = _replicated_store(replicas=2)
+    s.kill_prefix("part/1/")          # shard 1 down entirely
+    pol = _policy(max_attempts_per_replica=1, breaker_fail_threshold=2,
+                  breaker_cooldown_requests=4)
+    rs = ResilientStore(s, pol)
+    pids_on_shard1 = [pid for pid in range(8) if pid % 4 == 1]
+    for pid in pids_on_shard1:        # trip it
+        oc = rs.get_replicated(replica_keys("part", pid, 4, 2))
+        assert oc.ok and oc.replica_used == 1
+    assert rs.breaker_states()["part/1"] == CircuitBreaker.OPEN
+    assert rs.n_open_breakers() == 1
+    before = s.n_gets
+    oc = rs.get_replicated(replica_keys("part", 1, 4, 2))
+    assert oc.ok and oc.breaker_skips == 1 and oc.failovers == 0
+    assert s.n_gets == before + 1     # exactly one RPC: straight to r1
+    assert rs.n_breaker_skips >= 1
+
+
+# ------------------------------------------------- bounded fetch concurrency
+
+def test_get_many_bounded_inflight_subwaves():
+    s = _store()
+    keys = [f"p/{i}/obj" for i in range(8)]
+    lat_unlimited = [v[1] for v in s.get_many(keys).values()]
+    assert lat_unlimited == pytest.approx([1e-3] * 8)
+    lat_bounded = sorted(v[1] for v in
+                         s.get_many(keys, max_inflight=2).values())
+    # 2 slots x 1 ms per GET -> completions 1,1,2,2,3,3,4,4 ms
+    assert lat_bounded == pytest.approx(
+        [1e-3, 1e-3, 2e-3, 2e-3, 3e-3, 3e-3, 4e-3, 4e-3])
+    with pytest.raises(ValueError):
+        s.get_many(keys, max_inflight=0)
+
+
+def test_get_many_inflight_error_holds_slot():
+    s = _store()
+    s.kill_prefix("p/0/")
+    keys = [f"p/{i}/obj" for i in range(4)]
+    out = s.get_many(keys, on_missing="skip", max_inflight=1)
+    assert len(out) == 3
+    # serial slots: the dead key burned base latency before the rest
+    assert max(v[1] for v in out.values()) == pytest.approx(4e-3)
+
+
+# ------------------------------------------------------- hedge accounting
+
+def test_hedged_duplicate_is_counted():
+    """Satellite fix: the duplicate RPC issued after hedge_after_s shows
+    up in n_gets and bytes_fetched."""
+    s = _store()
+    nbytes = s._data["p/0/obj"].nbytes
+    s.get_hedged("p/0/obj", hedge_after_s=10.0)   # never hedges
+    assert s.n_gets == 1 and s.bytes_fetched == nbytes
+    s.get_hedged("p/0/obj", hedge_after_s=0.0)    # always hedges
+    assert s.n_gets == 3                          # first + duplicate
+    assert s.bytes_fetched == 3 * nbytes
