@@ -53,10 +53,12 @@ class BenchContext:
             self._cache[key] = (pag, time.time() - t0)
         return self._cache[key]
 
-    def pag_store(self, kind: str, storage: str, pag, seed: int = 0):
+    def pag_store(self, kind: str, storage: str, pag, seed: int = 0,
+                  compression: str = "none", pq_m: int = 8):
         store = ObjectStore(StorageConfig.preset(storage, seed=seed))
         write_partitions(pag, self.dataset(kind).base, store,
-                         n_shards=N_SHARDS)
+                         n_shards=N_SHARDS, compression=compression,
+                         pq_m=pq_m)
         return store
 
     def diskann(self, kind: str, storage: str):

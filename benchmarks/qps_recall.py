@@ -19,7 +19,7 @@ from benchmarks.common import N_SHARDS, BenchContext, emit
 from repro.baselines.diskann import search_diskann
 from repro.baselines.hnsw import search_hnsw
 from repro.baselines.spann import search_spann
-from repro.core.search import SearchConfig, search_pag
+from repro.core.search import SearchConfig, search_pag, write_partitions
 from repro.data.vectors import recall_at_k
 
 PAG_SWEEP = [(32, 16), (64, 32), (64, 64), (128, 96), (160, 160)]
@@ -106,8 +106,102 @@ def _inflight_saturation(ctx: BenchContext, storage: str = "dfs",
     emit(f"qps_recall/{storage}/inflight_saturation", 0.0, f"at={sat}")
 
 
+PQ_RERANK_SWEEP = (16, 32, 64)
+
+
+def pq_main(ctx: BenchContext):
+    """Compressed data plane (v2 PQ payloads) vs the float plane on the
+    DFS profile: bytes fetched/query, recall@10, batch QPS, p99.
+
+    Runs in its own d=64 context with LARGE partitions (cap = lam/p):
+    the probe wave covers many partitions whose codes are ~32x smaller
+    than the residuals, while the exact refine wave concentrates in the
+    few partitions covering the ADC top — the geometry where the paper's
+    DFS byte bill actually shrinks. bytes/query is reported from the
+    per_query engine (no cross-query coalescing amortizing the bill) and
+    QPS from the batched engine."""
+    from repro.core.pag import build_pag
+    from repro.data.vectors import brute_force_knn
+    from repro.storage.cache import PartitionCache
+    from repro.storage.simulator import ObjectStore, StorageConfig
+
+    # >= 8000 points: below that the partitions (cap = lam/p) get too
+    # small for the probe/refine byte asymmetry to show
+    n, d, nq, k = max(ctx.n, 8000), 64, min(ctx.n_queries, 40), 10
+    rng = np.random.default_rng(ctx.seed)
+    cents = rng.standard_normal((40, d)).astype(np.float32) * 4
+    base = (cents[rng.integers(0, 40, n)] + rng.standard_normal(
+        (n, d))).astype(np.float32)
+    queries = (cents[rng.integers(0, 40, nq)] + rng.standard_normal(
+        (nq, d))).astype(np.float32)
+    gt_ids, _ = brute_force_knn(base, queries, k)
+    pag = build_pag(base, p=0.01, k=8, lam=8.0, redundancy=2, seed=0)
+
+    def run(cfg):
+        store = ObjectStore(StorageConfig.preset("dfs", seed=1))
+        write_partitions(pag, base, store, n_shards=N_SHARDS,
+                         compression="pq")
+        b0 = store.bytes_fetched
+        ids, _, st = search_pag(pag, d, queries, store, cfg,
+                                n_shards=N_SHARDS)
+        by = (store.bytes_fetched - b0) / nq
+        return recall_at_k(ids, gt_ids, k), by, st
+
+    print("\n== compressed data plane: PQ codes + exact rerank (dfs) ==")
+    base_bytes = {}
+    for engine in ("per_query", "batched"):
+        rec, by, st = run(SearchConfig(k=k, n_probe_max=32,
+                                       engine=engine))
+        base_bytes[engine] = by
+        print(f"  float {engine:9s}          recall={rec:.3f} "
+              f"bytes/q={by:9.0f} batch_qps={st.batch_qps():8.0f} "
+              f"p99={st.p99()*1e3:.2f}ms")
+        emit(f"qps_recall/pq/float/{engine}", 1e6 / st.batch_qps(),
+             f"recall={rec:.3f};bytes_per_q={by:.0f};"
+             f"batch_qps={st.batch_qps():.0f};p99_ms={st.p99()*1e3:.3f}")
+    for rk in PQ_RERANK_SWEEP:
+        for engine in ("per_query", "batched"):
+            rec, by, st = run(SearchConfig(k=k, n_probe_max=32,
+                                           engine=engine,
+                                           compression="pq",
+                                           rerank_k=rk))
+            ratio = base_bytes[engine] / max(by, 1e-9)
+            print(f"  pq rk={rk:3d} {engine:9s}    recall={rec:.3f} "
+                  f"bytes/q={by:9.0f} batch_qps={st.batch_qps():8.0f} "
+                  f"p99={st.p99()*1e3:.2f}ms ratio={ratio:.2f}x")
+            emit(f"qps_recall/pq/rk{rk}/{engine}", 1e6 / st.batch_qps(),
+                 f"recall={rec:.3f};bytes_per_q={by:.0f};"
+                 f"batch_qps={st.batch_qps():.0f};"
+                 f"p99_ms={st.p99()*1e3:.3f};bytes_ratio={ratio:.2f}")
+            if engine == "per_query" and rk == max(PQ_RERANK_SWEEP):
+                emit("qps_recall/pq/acceptance", 0.0,
+                     f"bytes_ratio={ratio:.2f};recall={rec:.3f}")
+                print(f"  >> bytes/query cut {ratio:.1f}x vs float "
+                      f"plane at recall={rec:.3f}")
+
+    # compressed objects through the PartitionCache: same byte budget
+    # now holds ~32x more partitions; report hit rate + evictions
+    cache = PartitionCache(96 * 1024)  # < codes+codebook: must evict
+    store = ObjectStore(StorageConfig.preset("dfs", seed=1))
+    write_partitions(pag, base, store, n_shards=N_SHARDS,
+                     compression="pq")
+    cfg = SearchConfig(k=k, n_probe_max=32, compression="pq",
+                       rerank_k=32, cache=cache)
+    for p in (1, 2):
+        _, _, st = search_pag(pag, d, queries, store, cfg,
+                              n_shards=N_SHARDS)
+        print(f"  pq cache pass {p}: hit_rate={st.cache_hit_rate:.3f} "
+              f"bytes_evicted={st.cache_bytes_evicted} "
+              f"batch_qps={st.batch_qps():8.0f}")
+        emit(f"qps_recall/pq/cache/pass{p}", 1e6 / st.batch_qps(),
+             f"hit_rate={st.cache_hit_rate:.3f};"
+             f"bytes_evicted={st.cache_bytes_evicted};"
+             f"batch_qps={st.batch_qps():.0f}")
+
+
 def main(ctx: BenchContext):
     _inflight_saturation(ctx)
+    pq_main(ctx)
     for storage, fig in (("ssd", "Fig8-disk"), ("mem", "Fig9-memory"),
                          ("dfs", "Fig10-dfs")):
         print(f"\n== {fig}: QPS vs Recall@10 ({storage}) ==")

@@ -13,9 +13,12 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every registered benchmark mode")
     ap.add_argument("--only", default="",
-                    help="comma list: build_time,qps_recall,redundancy,"
-                         "radius_grid,drs_tail,chaos,kernels,lm,roofline")
+                    help="comma list: build_time,qps_recall,pq,redundancy,"
+                         "radius_grid,drs_tail,cache_effect,chaos,"
+                         "kernels,lm,roofline")
     args = ap.parse_args()
 
     from benchmarks import (
@@ -37,6 +40,7 @@ def main() -> None:
     modules = {
         "build_time": build_time.main,
         "qps_recall": qps_recall.main,
+        "pq": qps_recall.pq_main,     # compressed data plane rows only
         "redundancy": redundancy.main,
         "radius_grid": radius_grid.main,
         "drs_tail": drs_tail.main,
@@ -46,7 +50,11 @@ def main() -> None:
         "lm": lm_step.main,
         "roofline": roofline.main,
     }
-    selected = args.only.split(",") if args.only else list(modules)
+    if args.all:
+        selected = list(modules)
+    else:
+        selected = args.only.split(",") if args.only else \
+            [m for m in modules if m != "pq"]  # pq rides in qps_recall
     print("name,us_per_call,derived")
     t0 = time.time()
     for name in selected:

@@ -63,6 +63,15 @@ def adc_lut(cb: PQCodebook, q: np.ndarray) -> np.ndarray:
     return lut
 
 
+def adc_lut_batch(cb: PQCodebook, q: np.ndarray) -> np.ndarray:
+    """ADC lookup tables for a query batch: q [Q, d] -> [Q, M, 256] f32
+    (row q is exactly ``adc_lut(cb, q[q])``; vectorized for the batched
+    compressed data plane)."""
+    qb = np.asarray(q, np.float32).reshape(len(q), cb.M, 1, cb.d_sub)
+    diff = cb.centroids[None] - qb              # [Q, M, 256, d_sub]
+    return np.einsum("qmcd,qmcd->qmc", diff, diff).astype(np.float32)
+
+
 def adc_distances(lut: np.ndarray, codes: np.ndarray) -> np.ndarray:
     """Approximate sq-distances via LUT gather: codes [n, M] -> [n]."""
     return lut[np.arange(lut.shape[0])[None, :], codes].sum(axis=1)

@@ -53,6 +53,34 @@ Two data-plane engines (``SearchConfig.engine``):
   retries, failovers, timeouts, corruptions, breaker skips).
 * ``max_inflight`` — bounds the concurrency of the batched engine's
   RPC wave (sub-waves on the event clock; queueing charged).
+* ``compression`` — ``"pq"`` switches the probe wave to the v2
+  compressed payloads: the wave fetches only the per-partition PQ code
+  objects (``uint8 [cnt, M]`` — 8-16x fewer bytes than the float
+  residuals), one masked Pallas ADC launch
+  (``kernels/pq_adc.pq_adc_masked``) scores every query's pooled
+  candidates, and an exact refine wave fetches the full float residual
+  objects only for the partitions holding each query's ADC-top
+  ``rerank_k`` candidates. A ``PartitionCache`` then caches the
+  *compressed* objects (same byte budget, ~8-16x more partitions). A
+  lost code object degrades exactly like a lost partition; a lost
+  refine object drops that partition from the exact pool (both counted
+  in ``DegradedInfo.n_probes_lost``); corrupt payloads are never
+  admitted to the cache.
+
+v2 payload format (``write_partitions(compression="pq")``), per
+partition ``pid`` with ``S`` shards / ``R`` replicas:
+
+* float residuals  ``prefix/{pid%S}/{pid}``            (+ ``/r{j}``)
+* PQ codes         ``prefix/{pid%S}/{pid}/pq``         (+ ``/r{j}``)
+* codebook         ``prefix/meta/pq_codebook``         (+ ``/r{j}``)
+
+Code objects are colocated with their float siblings (one shard loss
+kills both), carry put-time checksums, and replicate round-robin like
+the float path. Ids are NOT stored in code objects — the in-memory
+``pag.plist`` already maps partition rows to original ids. The float
+object's id column bit-casts ``int32`` ids into the ``float32`` column
+(``_pack_ids``/``_unpack_ids``) so billion-scale ids survive exactly
+(a plain float cast is only exact below 2^24).
 """
 from __future__ import annotations
 
@@ -69,6 +97,7 @@ from repro.storage.resilience import (
     FetchOutcome,
     ResiliencePolicy,
     ResilientStore,
+    codebook_keys,
     replica_keys,
 )
 from repro.storage.simulator import (
@@ -82,26 +111,63 @@ INF = np.float32(3.4e38)
 ID_SENTINEL = 2 ** 62   # invalid-id marker used during dedup
 
 
+def _pack_ids(ids: np.ndarray) -> np.ndarray:
+    """Bit-cast int32 ids into the float32 id column of a partition
+    object. A plain value cast is only exact below 2^24 (float32 has a
+    24-bit mantissa); the bit-cast is exact for the whole int32 range,
+    so billion-scale ids survive storage round-trips."""
+    return np.ascontiguousarray(ids, np.int32).view(np.float32)
+
+
+def _unpack_ids(col: np.ndarray) -> np.ndarray:
+    """Inverse of ``_pack_ids``: float32 id column -> int64 ids."""
+    return np.ascontiguousarray(col, np.float32).view(np.int32) \
+        .astype(np.int64)
+
+
 def write_partitions(pag: PAG, x: np.ndarray, store: ObjectStore,
                      prefix: str = "part", n_shards: int = 1,
-                     replicas: int = 1):
+                     replicas: int = 1, compression: str = "none",
+                     pq_m: int = 8, pq_seed: int = 0):
     """Materialize per-partition residual objects in the storage layer.
 
-    Object = float32 [cnt, 1 + d]: column 0 carries the original id (as a
-    bit-cast int), columns 1: the vector. Partitions are round-robined
-    over ``n_shards`` logical shards (prefix/<shard>/<pid>) so failure
-    injection can kill a shard (fault-tolerance tests). ``replicas=R``
-    writes R copies per partition: the primary under the legacy key and
-    replica j under ``prefix/<(pid+j)%n_shards>/<pid>/r<j>`` — adjacent
-    shards, so one shard loss never removes every copy (R <= shards)."""
+    Object = float32 [cnt, 1 + d]: column 0 carries the original id (a
+    BIT-CAST int32, exact for all ids — see ``_pack_ids``), columns 1:
+    the vector. Partitions are round-robined over ``n_shards`` logical
+    shards (prefix/<shard>/<pid>) so failure injection can kill a shard
+    (fault-tolerance tests). ``replicas=R`` writes R copies per
+    partition: the primary under the legacy key and replica j under
+    ``prefix/<(pid+j)%n_shards>/<pid>/r<j>`` — adjacent shards, so one
+    shard loss never removes every copy (R <= shards).
+
+    ``compression="pq"`` additionally writes the v2 compressed payloads:
+    one per-index PQ codebook (trained here, stored under
+    ``prefix/meta/pq_codebook``) and per-partition uint8 [cnt, M] code
+    objects colocated with their float siblings
+    (``prefix/<shard>/<pid>/pq``), replicated and checksummed exactly
+    like the float path. Returns the trained ``PQCodebook`` (or None)."""
+    if compression not in ("none", "pq"):
+        raise ValueError(f"unknown compression: {compression!r}")
+    cb = None
+    if compression == "pq":
+        from repro.baselines.pq import encode_pq, train_pq
+        cb = train_pq(np.asarray(x, np.float32), M=pq_m, seed=pq_seed)
+        for key in codebook_keys(prefix, replicas):
+            store.put(key, cb.centroids)
     for pid in range(pag.n_parts):
         cnt = int(pag.pcount[pid])
         ids = pag.plist[pid, :cnt]
         obj = np.zeros((cnt, x.shape[1] + 1), np.float32)
-        obj[:, 0] = ids.astype(np.float32)  # exact for ids < 2^24
+        obj[:, 0] = _pack_ids(ids)
         obj[:, 1:] = x[ids]
         for key in replica_keys(prefix, pid, n_shards, replicas):
             store.put(key, obj)
+        if cb is not None:
+            codes = encode_pq(cb, np.asarray(obj[:, 1:], np.float32))
+            for key in replica_keys(prefix, pid, n_shards, replicas,
+                                    obj="pq"):
+                store.put(key, codes)
+    return cb
 
 
 @dataclasses.dataclass
@@ -121,6 +187,15 @@ class SearchConfig:
     # persist across batches). None = the bare skip/raise data plane.
     resilience: Optional[object] = None
     max_inflight: Optional[int] = None  # bound the batched RPC wave
+    # Compressed data plane (v2 payloads). "pq": the probe wave fetches
+    # only PQ code objects, a masked ADC Pallas launch ranks each
+    # query's pooled candidates, and the exact refine wave fetches the
+    # float residuals of the partitions holding the ADC-top ``rerank_k``
+    # candidates. ``pq_m`` is the write-side subspace count (the search
+    # itself reads M from the stored codebook object).
+    compression: str = "none"   # none | pq
+    pq_m: int = 8
+    rerank_k: int = 32          # ADC-top candidates refined exactly
 
 
 @dataclasses.dataclass
@@ -155,6 +230,10 @@ class SearchStats:
     n_distinct_fetches: int = 0   # storage GETs after coalescing + cache
     batch_span_s: float = 0.0     # event-clock makespan of the batch
     degraded: List[DegradedInfo] = dataclasses.field(default_factory=list)
+    # PartitionCache health after this batch (cumulative over the
+    # cache's lifetime; None when the search ran cache-less)
+    cache_hit_rate: Optional[float] = None
+    cache_bytes_evicted: int = 0
 
     def n_degraded_queries(self) -> int:
         return sum(1 for d in self.degraded if d.degraded)
@@ -258,15 +337,17 @@ def _resolve_resilient(store: ObjectStore, cfg: SearchConfig
 
 def _fetch_batched(probes_all: List[List[int]], rkeys_of, store: ObjectStore,
                    resilient: Optional[ResilientStore], cfg: SearchConfig,
-                   dead_shard_fallback: bool
+                   dead_shard_fallback: bool, cache: Optional[object]
                    ) -> Tuple[Dict[int, np.ndarray], Dict[int, float],
                               Dict[int, List[int]], List[int], int,
                               Dict[int, FetchOutcome]]:
     """Coalesce partition probes across the batch: one cache pass + one
     concurrent wave over the distinct partitions (get_many, or replicated
-    fetch chains when resilience is on). Returns (objs, latency-per-pid,
-    probers-per-pid, first-probe order, n_store_fetches,
-    fetch-outcome-per-pid)."""
+    fetch chains when resilience is on). ``cache`` is consulted/filled
+    when given (the compressed plane passes None for the exact refine
+    wave: only compressed objects are cached). Returns (objs,
+    latency-per-pid, probers-per-pid, first-probe order,
+    n_store_fetches, fetch-outcome-per-pid)."""
     order: List[int] = []
     probers: Dict[int, List[int]] = {}
     for qi, probes in enumerate(probes_all):
@@ -284,8 +365,7 @@ def _fetch_batched(probes_all: List[List[int]], rkeys_of, store: ObjectStore,
     outcomes: Dict[int, FetchOutcome] = {}
     to_fetch: List[int] = []
     for pid in order:
-        cached = cfg.cache.get(key_of(pid)) if cfg.cache is not None \
-            else None
+        cached = cache.get(key_of(pid)) if cache is not None else None
         if cached is not None:
             objs[pid], lat[pid] = cached, 0.0  # local-memory hit
         else:
@@ -320,19 +400,223 @@ def _fetch_batched(probes_all: List[List[int]], rkeys_of, store: ObjectStore,
             outcomes[pid] = FetchOutcome(
                 value=got[0], elapsed_s=got[1], ok=True, replica_used=0)
         n_store = len(fetched)
-    if cfg.cache is not None:
+    if cache is not None:
         # corrupted payloads must never be admitted to the cache: the
         # resilient chain already verified survivors; the bare plane
         # checks the put-time checksum here at admission
-        cfg.cache.put_many({
+        cache.put_many({
             key_of(pid): objs[pid] for pid in to_fetch
             if pid in objs and (resilient is not None
                                 or store.verify(key_of(pid), objs[pid]))})
         for pid in order:
             if pid in objs:
-                cfg.cache.account_shared(key_of(pid),
-                                         len(probers[pid]) - 1)
+                cache.account_shared(key_of(pid),
+                                     len(probers[pid]) - 1)
     return objs, lat, probers, order, n_store, outcomes
+
+
+def _fetch_per_query(probes_all: List[List[int]], rkeys_of,
+                     store: ObjectStore,
+                     resilient: Optional[ResilientStore],
+                     cfg: SearchConfig, dead_shard_fallback: bool,
+                     cache: Optional[object],
+                     timelines: List[QueryTimeline],
+                     degraded: List[DegradedInfo], scan_cost
+                     ) -> Tuple[Dict[int, np.ndarray], int]:
+    """The seed data plane, one wave: blocking per-partition GETs, query
+    by query (no cross-query coalescing — a partition probed by two
+    queries is fetched twice unless a cache serves the second). Charges
+    each query's timeline (``scan_cost(obj) -> seconds`` per scan) and
+    fills per-query ``DegradedInfo``. Returns (objs, n_store_fetches)."""
+    objs: Dict[int, np.ndarray] = {}
+    n_store = 0
+    for qi, probes in enumerate(probes_all):
+        for pid in probes:
+            key = rkeys_of(pid)[0]
+            cached = cache.get(key) if cache is not None else None
+            if cached is not None:
+                obj, io_lat = cached, 0.0  # local-memory hit
+            elif resilient is not None:
+                oc = resilient.get_replicated(
+                    rkeys_of(pid), hedge_after_s=cfg.hedge_after_s)
+                degraded[qi].add_outcome(oc)
+                if not oc.ok:
+                    degraded[qi].n_probes_lost += 1
+                    timelines[qi].issue_io(oc.elapsed_s, 0.0)
+                    if dead_shard_fallback:
+                        continue  # degraded: budget burned, no data
+                    raise KeyError(f"partition lost: {key}")
+                obj, io_lat = oc.value, oc.elapsed_s
+                n_store += 1
+                if cache is not None:
+                    cache.put(key, obj)
+            else:
+                try:
+                    if cfg.hedge_after_s is not None:
+                        obj, io_lat = store.get_hedged(
+                            key, cfg.hedge_after_s)
+                    else:
+                        obj, io_lat = store.get(key)
+                except KeyError:
+                    degraded[qi].n_probes_lost += 1
+                    if dead_shard_fallback:
+                        continue  # degraded: skip dead partition
+                    raise
+                n_store += 1
+                if cache is not None and store.verify(key, obj):
+                    cache.put(key, obj)  # no corrupt admission
+            objs[pid] = obj
+            timelines[qi].issue_io(io_lat, scan_cost(obj))
+    return objs, n_store
+
+
+def _load_codebook(store: ObjectStore, resilient: Optional[ResilientStore],
+                   cfg: SearchConfig, prefix: str,
+                   dead_shard_fallback: bool):
+    """Fetch the per-index PQ codebook object — index metadata shared by
+    every query, fetched once per search call in BOTH engines and
+    admitted to the cache (steady-state serving pays for it once).
+    Returns (PQCodebook | None, latency_s, n_store_fetches, outcome)."""
+    from repro.baselines.pq import PQCodebook
+    keys = codebook_keys(prefix, cfg.replicas)
+    oc: Optional[FetchOutcome] = None
+    n_store = 0
+    cached = cfg.cache.get(keys[0]) if cfg.cache is not None else None
+    if cached is not None:
+        arr, lat = cached, 0.0  # local-memory hit
+    elif resilient is not None:
+        oc = resilient.get_replicated(keys,
+                                      hedge_after_s=cfg.hedge_after_s)
+        if not oc.ok:
+            if dead_shard_fallback:
+                return None, oc.elapsed_s, 0, oc
+            raise KeyError(f"pq codebook lost: {keys[0]}")
+        arr, lat, n_store = oc.value, oc.elapsed_s, 1
+        if cfg.cache is not None:
+            cfg.cache.put(keys[0], arr)
+    else:
+        try:
+            if cfg.hedge_after_s is not None:
+                arr, lat = store.get_hedged(keys[0], cfg.hedge_after_s)
+            else:
+                arr, lat = store.get(keys[0])
+        except KeyError:
+            if dead_shard_fallback:
+                return None, 0.0, 0, None
+            raise
+        n_store = 1
+        if cfg.cache is not None and store.verify(keys[0], arr):
+            cfg.cache.put(keys[0], arr)  # no corrupt admission
+    arr = np.asarray(arr)
+    m, _, d_sub = arr.shape
+    return PQCodebook(arr, m, m * d_sub), lat, n_store, oc
+
+
+def _adc_select(codebook, queries: np.ndarray,
+                probes_all: List[List[int]],
+                objs: Dict[int, np.ndarray], pag: PAG, rerank_k: int,
+                scan_block: int) -> List[List[int]]:
+    """The ADC stage of the compressed plane: pool every query's fetched
+    code objects (rows mapped to original ids via the in-memory
+    ``pag.plist``, deduped like the exact pool), score ALL pools in one
+    masked Pallas launch, and return, per query, the partitions holding
+    its ADC-top ``rerank_k`` candidates (ordered by ADC rank) — the
+    exact refine wave's fetch list. Redundant copies (Def 5) make the
+    partition choice a covering problem: a candidate counts as covered
+    by ANY already-selected partition holding one of its copies, so the
+    refine wave fetches the fewest partitions that cover the ADC top."""
+    from repro.baselines.pq import adc_lut_batch
+    q_count = len(probes_all)
+    cand_pids: List[np.ndarray] = []
+    cand_codes: List[np.ndarray] = []
+    cand_ids: List[np.ndarray] = []
+    id_pids: List[Dict[int, List[int]]] = []  # id -> probed pids with it
+    for qi in range(q_count):
+        ids_l, pids_l, codes_l = [], [], []
+        for pid in probes_all[qi]:
+            codes = objs.get(pid)
+            if codes is None:
+                continue
+            cnt = codes.shape[0]
+            ids_l.append(pag.plist[pid, :cnt].astype(np.int64))
+            pids_l.append(np.full(cnt, pid, np.int32))
+            codes_l.append(codes)
+        if ids_l:
+            ids_c = np.concatenate(ids_l)
+            pids_c = np.concatenate(pids_l)
+            keep = _dedup_first(ids_c)  # redundant copies score once
+            cand_pids.append(pids_c[keep])
+            cand_codes.append(np.concatenate(codes_l)[keep])
+            cand_ids.append(ids_c[keep])
+            by_id: Dict[int, List[int]] = {}
+            for i, cid in zip(pids_c, ids_c):
+                by_id.setdefault(int(cid), []).append(int(i))
+            id_pids.append(by_id)
+        else:
+            cand_pids.append(np.zeros(0, np.int32))
+            cand_codes.append(np.zeros((0, codebook.M), np.uint8))
+            cand_ids.append(np.zeros(0, np.int64))
+            id_pids.append({})
+
+    c_max = max((len(p) for p in cand_pids), default=0)
+    if c_max == 0:
+        return [[] for _ in range(q_count)]
+    m = codebook.M
+    codes_pad = np.zeros((q_count, c_max, m), np.uint8)
+    pos_pad = np.full((q_count, c_max), -1, np.int32)
+    for qi in range(q_count):
+        n = len(cand_pids[qi])
+        if n:
+            codes_pad[qi, :n] = cand_codes[qi]
+            pos_pad[qi, :n] = np.arange(n, dtype=np.int32)
+    luts = adc_lut_batch(codebook, np.asarray(queries, np.float32))
+    _, pos = ops.pq_adc_masked(
+        jnp.asarray(luts), jnp.asarray(codes_pad), jnp.asarray(pos_pad),
+        k=rerank_k, block_c=scan_block)
+    pos = np.asarray(pos)
+
+    refine_all: List[List[int]] = []
+    for qi in range(q_count):
+        chosen: List[int] = []
+        chosen_set: set = set()
+        for p in pos[qi]:
+            if p < 0:
+                continue
+            copies = id_pids[qi].get(int(cand_ids[qi][p]))
+            if copies is None:  # defensive: scored row always has copies
+                copies = [int(cand_pids[qi][p])]
+            if chosen_set.intersection(copies):
+                continue  # a selected partition already holds a copy
+            pid = int(cand_pids[qi][p])
+            chosen.append(pid)
+            chosen_set.add(pid)
+        refine_all.append(chosen)
+    return refine_all
+
+
+def _charge_probers(order: List[int], probers: Dict[int, List[int]],
+                    objs: Dict[int, np.ndarray], lat: Dict[int, float],
+                    outcomes: Dict[int, FetchOutcome],
+                    timelines: List[QueryTimeline],
+                    degraded: List[DegradedInfo], scan_cost):
+    """Per-query accounting of one coalesced wave: every prober is
+    charged the shared fetch chain's cost (latency incl.
+    retries/failovers) and its own scan (``scan_cost(obj) -> s``); lost
+    partitions are reported."""
+    for pid in order:
+        oc = outcomes.get(pid)
+        for qi in probers[pid]:
+            if oc is not None:
+                degraded[qi].add_outcome(oc)
+            if pid not in objs:
+                degraded[qi].n_probes_lost += 1
+        if pid not in objs:
+            if oc is not None and oc.elapsed_s > 0:
+                for qi in probers[pid]:  # failed chain burned budget
+                    timelines[qi].issue_io(oc.elapsed_s, 0.0)
+            continue
+        for qi in probers[pid]:
+            timelines[qi].issue_io(lat[pid], scan_cost(objs[pid]))
 
 
 def search_pag(pag: PAG, x_dim: int, queries: np.ndarray,
@@ -369,6 +653,14 @@ def search_pag(pag: PAG, x_dim: int, queries: np.ndarray,
     def rkeys_of(pid: int) -> List[str]:
         return replica_keys(prefix, pid, n_shards, cfg.replicas)
 
+    def ckeys_of(pid: int) -> List[str]:
+        return replica_keys(prefix, pid, n_shards, cfg.replicas,
+                            obj="pq")
+
+    if cfg.compression not in ("none", "pq"):
+        raise ValueError(f"unknown compression: {cfg.compression!r}")
+    pq = cfg.compression == "pq"
+
     resilient = _resolve_resilient(store, cfg)
     timelines = [QueryTimeline() for _ in range(q_count)]
     degraded = [DegradedInfo(n_probes_wanted=len(probes_all[qi]))
@@ -376,31 +668,44 @@ def search_pag(pag: PAG, x_dim: int, queries: np.ndarray,
     for qi in range(q_count):
         timelines[qi].add_compute(traversal_s[qi])
 
+    codebook, cb_lat, cb_fetch = None, 0.0, 0
+    if pq:
+        codebook, cb_lat, cb_fetch, cb_oc = _load_codebook(
+            store, resilient, cfg, prefix, dead_shard_fallback)
+        if codebook is None:
+            # the compressed plane is down for this batch: every probe
+            # degrades like a lost partition (beam-only results)
+            for qi in range(q_count):
+                degraded[qi].n_probes_lost = len(probes_all[qi])
+                if cb_oc is not None:
+                    degraded[qi].add_outcome(cb_oc)
+            probes_all = [[] for _ in range(q_count)]
+        if cb_lat > 0:  # shared metadata fetch: charged to every query
+            for qi in range(q_count):
+                timelines[qi].issue_io(cb_lat, 0.0)
+
+    # probe wave: code objects under "pq" compression, else residuals.
+    # The ADC scan of a code object costs scan(cnt, M); exact scans
+    # cost scan(cnt, d).
+    key_fn = ckeys_of if pq else rkeys_of
+    probe_cost = (lambda o: compute.scan(o.shape[0], o.shape[1])) if pq \
+        else (lambda o: compute.scan(o.shape[0], x_dim))
+    exact_cost = lambda o: compute.scan(o.shape[0], x_dim)  # noqa: E731
+
+    fobjs: Dict[int, np.ndarray] = {}
+    refine_all: List[List[int]] = [[] for _ in range(q_count)]
+
     if cfg.engine == "batched":
         objs, lat, probers, order, n_store, outcomes = _fetch_batched(
-            probes_all, rkeys_of, store, resilient, cfg,
-            dead_shard_fallback)
-        # per-query accounting: every prober is charged the shared
-        # fetch chain's cost (latency incl. retries/failovers) and its
-        # own scan of the partition; lost partitions are reported
-        for pid in order:
-            oc = outcomes.get(pid)
-            for qi in probers[pid]:
-                if oc is not None:
-                    degraded[qi].add_outcome(oc)
-                if pid not in objs:
-                    degraded[qi].n_probes_lost += 1
-            if pid not in objs:
-                if oc is not None and oc.elapsed_s > 0:
-                    for qi in probers[pid]:  # failed chain burned budget
-                        timelines[qi].issue_io(oc.elapsed_s, 0.0)
-                continue
-            scan = compute.scan(objs[pid].shape[0], x_dim)
-            for qi in probers[pid]:
-                timelines[qi].issue_io(lat[pid], scan)
+            probes_all, key_fn, store, resilient, cfg,
+            dead_shard_fallback, cfg.cache)
+        _charge_probers(order, probers, objs, lat, outcomes, timelines,
+                        degraded, probe_cost)
         # batch event clock: a fetch issues when its FIRST prober's
         # traversal retires; one coalesced scan per distinct partition
         bt = QueryTimeline()
+        if cb_lat > 0:
+            bt.issue_io(cb_lat, 0.0)
         first_prober = {pid: probers[pid][0] for pid in order}
         for qi in range(q_count):
             bt.add_compute(traversal_s[qi])
@@ -408,58 +713,61 @@ def search_pag(pag: PAG, x_dim: int, queries: np.ndarray,
                 if first_prober[pid] != qi:
                     continue
                 if pid in objs:
+                    o = objs[pid]
                     bt.issue_io(lat[pid], compute.scan_batched(
-                        objs[pid].shape[0], x_dim, len(probers[pid])))
+                        o.shape[0], o.shape[1] if pq else x_dim,
+                        len(probers[pid])))
                 else:
                     oc = outcomes.get(pid)
                     if oc is not None and oc.elapsed_s > 0:
                         bt.issue_io(oc.elapsed_s, 0.0)  # burned budget
+        n_distinct = n_store + cb_fetch
+        if pq:
+            if codebook is not None and objs:
+                refine_all = _adc_select(codebook, queries, probes_all,
+                                         objs, pag, cfg.rerank_k,
+                                         cfg.scan_block)
+            # stage boundary: the exact refine wave can only issue
+            # after the ADC pass over the code objects has retired
+            for tl in timelines:
+                tl.barrier(cfg.mode)
+            bt.barrier(cfg.mode)
+            fobjs, flat, fprobers, forder, fn_store, foutcomes = \
+                _fetch_batched(refine_all, rkeys_of, store, resilient,
+                               cfg, dead_shard_fallback, None)
+            _charge_probers(forder, fprobers, fobjs, flat, foutcomes,
+                            timelines, degraded, exact_cost)
+            for pid in forder:
+                if pid in fobjs:
+                    bt.issue_io(flat[pid], compute.scan_batched(
+                        fobjs[pid].shape[0], x_dim,
+                        len(fprobers[pid])))
+                else:
+                    oc = foutcomes.get(pid)
+                    if oc is not None and oc.elapsed_s > 0:
+                        bt.issue_io(oc.elapsed_s, 0.0)  # burned budget
+            n_distinct += fn_store
         batch_span = bt.finish_async() if cfg.mode == "async" \
             else bt.finish_sync()
-        n_distinct = n_store
     elif cfg.engine == "per_query":
         # seed data plane: blocking per-partition GETs, query by query
-        objs = {}
-        n_distinct = 0
-        for qi in range(q_count):
-            for pid in probes_all[qi]:
-                key = rkeys_of(pid)[0]
-                cached = cfg.cache.get(key) if cfg.cache is not None \
-                    else None
-                if cached is not None:
-                    obj, io_lat = cached, 0.0  # local-memory hit
-                elif resilient is not None:
-                    oc = resilient.get_replicated(
-                        rkeys_of(pid), hedge_after_s=cfg.hedge_after_s)
-                    degraded[qi].add_outcome(oc)
-                    if not oc.ok:
-                        degraded[qi].n_probes_lost += 1
-                        timelines[qi].issue_io(oc.elapsed_s, 0.0)
-                        if dead_shard_fallback:
-                            continue  # degraded: budget burned, no data
-                        raise KeyError(f"partition lost: {key}")
-                    obj, io_lat = oc.value, oc.elapsed_s
-                    n_distinct += 1
-                    if cfg.cache is not None:
-                        cfg.cache.put(key, obj)
-                else:
-                    try:
-                        if cfg.hedge_after_s is not None:
-                            obj, io_lat = store.get_hedged(
-                                key, cfg.hedge_after_s)
-                        else:
-                            obj, io_lat = store.get(key)
-                    except KeyError:
-                        degraded[qi].n_probes_lost += 1
-                        if dead_shard_fallback:
-                            continue  # degraded: skip dead partition
-                        raise
-                    n_distinct += 1
-                    if cfg.cache is not None and store.verify(key, obj):
-                        cfg.cache.put(key, obj)  # no corrupt admission
-                objs[pid] = obj
-                timelines[qi].issue_io(io_lat,
-                                       compute.scan(obj.shape[0], x_dim))
+        objs, n_store = _fetch_per_query(
+            probes_all, key_fn, store, resilient, cfg,
+            dead_shard_fallback, cfg.cache, timelines, degraded,
+            probe_cost)
+        n_distinct = n_store + cb_fetch
+        if pq:
+            if codebook is not None and objs:
+                refine_all = _adc_select(codebook, queries, probes_all,
+                                         objs, pag, cfg.rerank_k,
+                                         cfg.scan_block)
+            for tl in timelines:  # ADC retires before the refine wave
+                tl.barrier(cfg.mode)
+            fobjs, fn_store = _fetch_per_query(
+                refine_all, rkeys_of, store, resilient, cfg,
+                dead_shard_fallback, None, timelines, degraded,
+                exact_cost)
+            n_distinct += fn_store
         batch_span = None  # serial stream: filled from latencies below
     else:
         raise ValueError(f"unknown engine: {cfg.engine!r}")
@@ -471,7 +779,10 @@ def search_pag(pag: PAG, x_dim: int, queries: np.ndarray,
 
     # candidate pools: aggregation points on the beam (they are dataset
     # points) + residuals of the available probed partitions, deduped by
-    # original id (redundant copies, Def 5)
+    # original id (redundant copies, Def 5). Under "pq" the exact pool
+    # draws from the refine wave's float objects.
+    pool_src = refine_all if pq else probes_all
+    pool_objs = fobjs if pq else objs
     valid_beam = (beam_ids < pg.n_nodes) & (beam_d2 < INF)
     beam_safe = np.minimum(beam_ids, pg.m_cap - 1)
     pool_ids: List[np.ndarray] = []
@@ -480,11 +791,11 @@ def search_pag(pag: PAG, x_dim: int, queries: np.ndarray,
         nodes = beam_safe[qi][valid_beam[qi]]
         ids_list = [pag.node_src[nodes].astype(np.int64)]
         vec_list = [pg.A[nodes].astype(np.float32)]
-        for pid in probes_all[qi]:
-            obj = objs.get(pid)
+        for pid in pool_src[qi]:
+            obj = pool_objs.get(pid)
             if obj is None:
                 continue
-            ids_list.append(obj[:, 0].astype(np.int64))
+            ids_list.append(_unpack_ids(obj[:, 0]))
             vec_list.append(obj[:, 1:])
         ids_cat = np.concatenate(ids_list)
         keep = _dedup_first(ids_cat)
@@ -496,6 +807,9 @@ def search_pag(pag: PAG, x_dim: int, queries: np.ndarray,
 
     stats = SearchStats([], [], [], n_distinct_fetches=n_distinct,
                         degraded=degraded)
+    if cfg.cache is not None:
+        stats.cache_hit_rate = cfg.cache.hit_rate
+        stats.cache_bytes_evicted = cfg.cache.bytes_evicted
     for qi in range(q_count):
         tl = timelines[qi]
         lat_q = tl.finish_async() if cfg.mode == "async" \

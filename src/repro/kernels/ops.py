@@ -41,6 +41,16 @@ def pq_adc(lut, codes, block_n: int = 1024, interpret: bool | None = None):
     return _pq.pq_adc(lut, codes, block_n=block_n, interpret=interpret)
 
 
+def pq_adc_masked(luts, codes, ids, k: int = 10, block_c: int = 256,
+                  interpret: bool | None = None):
+    """luts [Q, M, 256] f32, codes [Q, C, M], ids [Q, C] (-1 pads ragged
+    rows) -> (d2 [Q, k] ascending, ids [Q, k]); short rows pad
+    (3.4e38, -1)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return _pq.pq_adc_masked(luts, codes, ids, k=k, block_c=block_c,
+                             interpret=interpret)
+
+
 def flash_attention(q, k, v, causal: bool = True, block_q: int = 128,
                     block_k: int = 128, interpret: bool | None = None):
     """q [B, H, Sq, d]; k, v [B, H, Sk, d] -> [B, H, Sq, d]."""

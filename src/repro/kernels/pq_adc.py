@@ -1,11 +1,18 @@
-"""PQ asymmetric-distance computation (Pallas TPU) for the DiskANN
-baseline's in-memory guidance distances.
+"""PQ asymmetric-distance computation (Pallas TPU): the DiskANN
+baseline's in-memory guidance distances (``pq_adc``) and the compressed
+data plane's batched ragged-pool scorer (``pq_adc_masked``).
 
 TPU adaptation: the CPU implementation is M scalar L1-cache LUT gathers
 per point; TPUs have no scalar gather units, so the lookup becomes a
 one-hot matmul per subspace against the VMEM-resident LUT — MXU work
 instead of pointer chasing (DESIGN.md §2). Codes stream in [BN, M] blocks;
 the [M, 256] LUT stays resident.
+
+``pq_adc_masked`` mirrors ``l2_topk_masked``: every query of a batch
+carries its own LUT and its own ragged candidate pool (code rows padded
+with id -1); one launch streams the pools in [Q, BC, M] blocks, keeps a
+running per-query top-k in VMEM, and returns the ADC-nearest candidates
+of every query — the selection stage of the PQ-compressed probe wave.
 """
 from __future__ import annotations
 
@@ -14,6 +21,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.l2_topk import _select_topk
 
 
 def _kernel(lut_ref, codes_ref, out_ref, *, m: int):
@@ -55,3 +64,81 @@ def pq_adc(lut: jax.Array, codes: jax.Array, block_n: int = 1024,
         interpret=interpret,
     )(lut, codes)
     return out[:n]
+
+
+def _masked_kernel(lut_ref, codes_ref, id_ref, out_d_ref, out_i_ref, *,
+                   k: int, m: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_d_ref[...] = jnp.full_like(out_d_ref, 3.4e38)
+        out_i_ref[...] = jnp.full_like(out_i_ref, -1)
+
+    luts = lut_ref[...]                        # [Q, M, 256] resident
+    codes = codes_ref[...]                     # [Q, BC, M] streamed block
+    ids = id_ref[...]                          # [Q, BC] (-1 = padding)
+    qn, bc = codes.shape[0], codes.shape[1]
+    acc = jnp.zeros((qn, bc), jnp.float32)
+    for sub in range(m):                       # M static, unrolled
+        onehot = (jax.lax.broadcasted_iota(
+            jnp.int32, (qn, bc, 256), 2)
+            == codes[:, :, sub][:, :, None]).astype(jnp.float32)
+        # per-query batched [BC, 256] @ [256] on the MXU
+        acc = acc + jax.lax.dot_general(
+            onehot, luts[:, sub, :], (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)
+    d2 = jnp.where(ids >= 0, acc, 3.4e38)      # mask ragged padding
+
+    merged_d = jnp.concatenate([out_d_ref[...], d2], axis=1)
+    merged_i = jnp.concatenate([out_i_ref[...], ids], axis=1)
+    _select_topk(merged_d, merged_i, out_d_ref, out_i_ref, k)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "block_c", "interpret"))
+def pq_adc_masked(luts: jax.Array, codes: jax.Array, ids: jax.Array,
+                  k: int = 10, block_c: int = 256,
+                  interpret: bool = True):
+    """Ragged per-query PQ pools -> per-query ADC top-k.
+
+    luts [Q, M, 256] f32 (one ADC table per query); codes [Q, C, M]
+    uint8/int32; ids [Q, C] int32 candidate ids with -1 marking ragged
+    padding. Returns (d2 [Q, k] ascending, ids [Q, k]); rows shorter
+    than k pad with (3.4e38, -1). One launch scores the compressed
+    pools of ALL queries of a batch (the PQ probe wave's hot loop)."""
+    qn, m = luts.shape[0], luts.shape[1]
+    c = codes.shape[1]
+    if c == 0:  # empty pools: all rows pad
+        return (jnp.full((qn, k), 3.4e38, jnp.float32),
+                jnp.full((qn, k), -1, jnp.int32))
+    codes = codes.astype(jnp.int32)
+    block_c = min(block_c, c)
+    pad = (-c) % block_c
+    if pad:
+        codes = jnp.pad(codes, ((0, 0), (0, pad), (0, 0)))
+        ids = jnp.pad(ids, ((0, 0), (0, pad)), constant_values=-1)
+    c_pad = c + pad
+
+    grid = (c_pad // block_c,)
+    out_d, out_i = pl.pallas_call(
+        functools.partial(_masked_kernel, k=k, m=m),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((qn, m, 256), lambda i: (0, 0, 0)),  # LUTs resident
+            pl.BlockSpec((qn, block_c, m), lambda i: (0, i, 0)),
+            pl.BlockSpec((qn, block_c), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((qn, k), lambda i: (0, 0)),          # running top-k
+            pl.BlockSpec((qn, k), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((qn, k), jnp.float32),
+            jax.ShapeDtypeStruct((qn, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(luts, codes, ids)
+    valid = out_i >= 0
+    out_d = jnp.where(valid, out_d, 3.4e38)
+    return out_d, out_i

@@ -44,6 +44,24 @@ def pq_adc_ref(lut: jax.Array, codes: jax.Array):
     return jnp.sum(lut[jnp.arange(m)[None, :], codes], axis=1)
 
 
+def pq_adc_masked_ref(luts: jax.Array, codes: jax.Array, ids: jax.Array,
+                      k: int):
+    """luts [Q, M, 256]; codes [Q, C, M]; ids [Q, C] (-1 = padding) ->
+    (d2 [Q, k], ids [Q, k]) ascending; short rows pad with (3.4e38, -1)."""
+    codes = codes.astype(jnp.int32)
+    d2 = jax.vmap(pq_adc_ref)(luts, codes)          # [Q, C]
+    d2 = jnp.where(ids >= 0, d2, 3.4e38)
+    c = codes.shape[1]
+    if c < k:  # pad so top_k has k columns to select from
+        d2 = jnp.pad(d2, ((0, 0), (0, k - c)), constant_values=3.4e38)
+        ids = jnp.pad(ids, ((0, 0), (0, k - c)), constant_values=-1)
+    neg, pos = jax.lax.top_k(-d2, k)
+    out_i = jnp.take_along_axis(ids, pos, axis=1)
+    out_d = jnp.where(out_i >= 0, -neg, 3.4e38)
+    out_i = jnp.where(out_i >= 0, out_i, -1)
+    return out_d, out_i
+
+
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                         causal: bool = True):
     """q [B, H, Sq, d]; k, v [B, H, Sk, d] -> [B, H, Sq, d]."""

@@ -23,6 +23,8 @@ class PartitionCache:
         self._bytes = 0
         self.hits = 0
         self.misses = 0
+        self.bytes_evicted = 0      # cumulative LRU eviction volume
+        self.n_evictions = 0
 
     def get(self, key: str) -> Optional[np.ndarray]:
         if key in self._data:
@@ -43,6 +45,8 @@ class PartitionCache:
         while self._bytes > self.capacity and self._data:
             _, evicted = self._data.popitem(last=False)
             self._bytes -= evicted.nbytes
+            self.bytes_evicted += evicted.nbytes
+            self.n_evictions += 1
 
     def put_many(self, items: "dict[str, np.ndarray]"):
         """Fill the cache from one coalesced fetch wave."""

@@ -48,12 +48,30 @@ import numpy as np
 from repro.storage.simulator import ObjectStore
 
 
-def replica_keys(prefix: str, pid: int, n_shards: int, replicas: int
-                 ) -> List[str]:
-    """Keys of the R copies of partition ``pid`` (primary first)."""
-    keys = [f"{prefix}/{pid % n_shards}/{pid}"]
+def replica_keys(prefix: str, pid: int, n_shards: int, replicas: int,
+                 obj: str = "") -> List[str]:
+    """Keys of the R copies of partition ``pid`` (primary first).
+
+    ``obj`` selects the payload kind of the v2 partition format: ""
+    is the float residual object (legacy key, replica-unaware readers
+    keep working); "pq" is the uint8 PQ code object, colocated on the
+    same shard as its float sibling (``prefix/{shard}/{pid}/pq`` and
+    ``.../pq/r{j}``) so a shard loss kills both together."""
+    suffix = f"/{obj}" if obj else ""
+    keys = [f"{prefix}/{pid % n_shards}/{pid}{suffix}"]
     for j in range(1, replicas):
-        keys.append(f"{prefix}/{(pid + j) % n_shards}/{pid}/r{j}")
+        keys.append(f"{prefix}/{(pid + j) % n_shards}/{pid}{suffix}/r{j}")
+    return keys
+
+
+def codebook_keys(prefix: str, replicas: int = 1) -> List[str]:
+    """Keys of the R copies of the per-index PQ codebook object. The
+    codebook is index metadata, not partition data, so it lives under
+    the shard-less ``{prefix}/meta/`` namespace (a ``kill_prefix`` on a
+    data shard never removes it; killing the whole prefix does)."""
+    keys = [f"{prefix}/meta/pq_codebook"]
+    for j in range(1, replicas):
+        keys.append(f"{prefix}/meta/pq_codebook/r{j}")
     return keys
 
 

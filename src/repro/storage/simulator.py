@@ -172,9 +172,15 @@ class ObjectStore:
         bad = np.array(v, copy=True)
         if bad.size:
             h = zlib.crc32(f"{self.fault_plan.seed}:flip:{key}".encode())
-            # finite garbage: wrong enough to poison ids/distances,
-            # still castable (no overflow warnings downstream)
-            bad.reshape(-1)[h % bad.size] = np.float32(2 ** 30)
+            flat = bad.reshape(-1)
+            if np.issubdtype(bad.dtype, np.integer):
+                # integer payloads (PQ code objects): XOR a nonzero
+                # pattern — always changes the element, never overflows
+                flat[h % bad.size] ^= np.asarray(0xA5, bad.dtype)
+            else:
+                # finite garbage: wrong enough to poison ids/distances,
+                # still castable (no overflow warnings downstream)
+                flat[h % bad.size] = np.float32(2 ** 30)
         return bad
 
     def get(self, key: str, now_s: float = 0.0, attempt: int = 0
@@ -341,3 +347,13 @@ class QueryTimeline:
             return self.compute_s
         start = self.compute_s + max(f.latency_s for f in self.fetches)
         return start + sum(f.scan_cost_s for f in self.fetches)
+
+    def barrier(self, mode: str = "async"):
+        """Stage boundary (the two-stage compressed data plane): collapse
+        every outstanding fetch into the compute cursor, so later IO can
+        only issue after all current-stage scans retired — e.g. the exact
+        refine wave issues only once the ADC pass over the fetched code
+        objects has completed."""
+        self.compute_s = self.finish_async() if mode == "async" \
+            else self.finish_sync()
+        self.fetches = []

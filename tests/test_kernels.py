@@ -70,6 +70,77 @@ def test_pq_adc(n, m, block):
                                rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize("n,block", [
+    (37, 128),     # n < block_n
+    (300, 128),    # n % block_n != 0
+    (256, 256),    # exact multiple
+])
+def test_pq_adc_uint8_and_odd_sizes(n, block):
+    # uint8 codes as stored by write_partitions' v2 payload format
+    rng = np.random.default_rng(n)
+    lut = rng.random((8, 256), np.float32)
+    codes = rng.integers(0, 256, (n, 8), dtype=np.uint8)
+    out = ops.pq_adc(jnp.asarray(lut), jnp.asarray(codes),
+                     block_n=block, interpret=True)
+    from repro.baselines.pq import adc_distances
+    np.testing.assert_allclose(np.asarray(out),
+                               adc_distances(lut, codes),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("qn,c,m,k,block", [
+    (4, 96, 8, 5, 32),
+    (7, 257, 4, 10, 128),     # non-multiple C
+    (5, 40, 16, 64, 64),      # k > pool size: rows pad (-1, 3.4e38)
+])
+def test_pq_adc_masked_ragged(qn, c, m, k, block):
+    rng = np.random.default_rng(qn * c)
+    luts = rng.random((qn, m, 256)).astype(np.float32)
+    codes = rng.integers(0, 256, (qn, c, m), dtype=np.uint8)
+    ids = rng.integers(0, 10_000, (qn, c)).astype(np.int32)
+    lens = np.linspace(0, c, qn).astype(int)  # ragged rows incl. empty
+    ids = np.where(np.arange(c)[None, :] < lens[:, None], ids, -1) \
+        .astype(np.int32)
+    d2, oi = ops.pq_adc_masked(jnp.asarray(luts), jnp.asarray(codes),
+                               jnp.asarray(ids), k=k, block_c=block,
+                               interpret=True)
+    d2r, oir = ref.pq_adc_masked_ref(jnp.asarray(luts),
+                                     jnp.asarray(codes),
+                                     jnp.asarray(ids), k)
+    np.testing.assert_allclose(d2, d2r, rtol=1e-4, atol=1e-4)
+    for a, b in zip(np.asarray(oi), np.asarray(oir)):
+        assert set(a.tolist()) == set(b.tolist())
+    short = np.asarray(oi)[lens < k]  # short rows end in padding
+    assert (short[:, -1] == -1).all() if len(short) else True
+
+
+def test_pq_adc_masked_matches_baseline_per_query():
+    # each unmasked row must score exactly adc_distances(lut, codes)
+    from repro.baselines.pq import adc_distances
+    rng = np.random.default_rng(3)
+    qn, c, m, k = 3, 64, 8, 64
+    luts = rng.random((qn, m, 256)).astype(np.float32)
+    codes = rng.integers(0, 256, (qn, c, m), dtype=np.uint8)
+    ids = np.tile(np.arange(c, dtype=np.int32), (qn, 1))
+    d2, oi = ops.pq_adc_masked(jnp.asarray(luts), jnp.asarray(codes),
+                               jnp.asarray(ids), k=k, interpret=True)
+    for qi in range(qn):  # ids are positions, so want[oi] == d2 exactly
+        want = adc_distances(luts[qi], codes[qi])
+        np.testing.assert_allclose(np.asarray(d2[qi]),
+                                   want[np.asarray(oi[qi])],
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_pq_adc_masked_empty_pool():
+    # C == 0: every row is pure padding
+    d2, oi = ops.pq_adc_masked(
+        jnp.zeros((3, 4, 256), jnp.float32),
+        jnp.zeros((3, 0, 4), jnp.uint8),
+        jnp.zeros((3, 0), jnp.int32), k=5, interpret=True)
+    assert (np.asarray(oi) == -1).all()
+    assert (np.asarray(d2) >= 3.4e38 - 1).all()
+
+
 @pytest.mark.parametrize("b,h,sq,sk,d,bq,bk,causal", [
     (1, 2, 128, 128, 64, 64, 64, True),
     (2, 1, 256, 256, 32, 128, 128, True),
