@@ -59,22 +59,28 @@ def main(ctx: BenchContext):
     print("\n== chaos: recall/QPS/p99 vs fault rate x replication "
           "(DFS, sticky faults) ==")
     base = {}
-    for R in REPLICAS:
-        for rate in FAULT_RATES:
+    # smoke keeps R=2 (the claim below needs its fault-free baseline)
+    replicas = (1, 2) if ctx.smoke else REPLICAS
+    rates = (0.0, 0.1) if ctx.smoke else FAULT_RATES
+    for R in replicas:
+        for rate in rates:
             rec, st = _run(ctx, pag, ds, rate, R, sticky=True)
             if rate == 0.0:
                 base[R] = (rec, st.p99())
+            dt = st.degraded_total()   # one merged batch damage report
             print(f"  R={R} fault={rate:4.0%} recall={rec:.3f} "
                   f"qps={st.batch_qps():8.0f} p99={st.p99()*1e3:6.2f}ms "
-                  f"retries={st.total_retries():4d} "
-                  f"failovers={st.total_failovers():4d} "
+                  f"retries={dt.retries:4d} "
+                  f"failovers={dt.failovers:4d} "
                   f"degraded_q={st.n_degraded_queries():3d}")
             emit(f"chaos/sticky/R{R}/f{int(rate*100)}",
                  st.p99() * 1e6,
                  f"recall={rec:.4f};qps={st.batch_qps():.0f};"
                  f"p99_ms={st.p99()*1e3:.3f};"
-                 f"retries={st.total_retries()};"
-                 f"failovers={st.total_failovers()};"
+                 f"retries={dt.retries};"
+                 f"failovers={dt.failovers};"
+                 f"timeouts={dt.timeouts};"
+                 f"breaker_skips={dt.breaker_skips};"
                  f"degraded_q={st.n_degraded_queries()}")
 
     # the availability claim at the acceptance operating point:
@@ -94,11 +100,12 @@ def main(ctx: BenchContext):
          f"recall_r1={rec_r1:.4f};p99_ratio={st_r2.p99()/max(p99_ff,1e-12):.2f}")
 
     print("\n== chaos: non-sticky blips — retry/backoff alone (R=1) ==")
-    for rate in FAULT_RATES[1:]:
+    for rate in rates[1:]:
         rec, st = _run(ctx, pag, ds, rate, 1, sticky=False)
+        dt = st.degraded_total()
         print(f"  fault={rate:4.0%} recall={rec:.3f} "
-              f"retries={st.total_retries():4d} "
+              f"retries={dt.retries:4d} "
               f"degraded_q={st.n_degraded_queries():3d}")
         emit(f"chaos/blip/R1/f{int(rate*100)}", st.p99() * 1e6,
-             f"recall={rec:.4f};retries={st.total_retries()};"
+             f"recall={rec:.4f};retries={dt.retries};"
              f"degraded_q={st.n_degraded_queries()}")

@@ -3,13 +3,20 @@
 Every benchmark prints ``name,us_per_call,derived`` CSV rows (harness
 contract) plus a human-readable table; derived carries the figure-specific
 metric (recall, QPS, p99.9, ...).
+
+Machine-readable artifacts: ``collect_rows()`` captures everything a mode
+``emit()``s, and ``emit_bench_json`` writes it as ``BENCH_<mode>.json``
+(schema documented in benchmarks/README.md) — the artifact CI uploads.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
+import json
+import os
 import time
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Union
 
 import numpy as np
 
@@ -22,10 +29,66 @@ from repro.data.vectors import VectorDataset, make_dataset, recall_at_k
 from repro.storage.simulator import ComputeModel, ObjectStore, StorageConfig
 
 N_SHARDS = 4
+BENCH_SCHEMA_VERSION = 1
+
+# active row collector (set by collect_rows); emit() appends when present
+_collector: Optional[List[dict]] = None
+
+
+def _parse_derived(derived: str) -> Dict[str, Union[float, str, bool]]:
+    """``"recall=0.91;qps=1.2e4;sync"`` -> typed dict. ``k=v`` pairs
+    parse the value as float when possible (string otherwise); a bare
+    token becomes ``{token: True}``."""
+    out: Dict[str, Union[float, str, bool]] = {}
+    for part in str(derived).split(";"):
+        part = part.strip()
+        if not part:
+            continue
+        if "=" in part:
+            k, v = part.split("=", 1)
+            try:
+                out[k.strip()] = float(v)
+            except ValueError:
+                out[k.strip()] = v.strip()
+        else:
+            out[part] = True
+    return out
 
 
 def emit(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+    if _collector is not None:
+        _collector.append({"name": name, "us_per_call": float(us_per_call),
+                           "derived": _parse_derived(derived)})
+
+
+@contextlib.contextmanager
+def collect_rows():
+    """Capture every ``emit()`` row inside the block as a list of dicts
+    (feeds ``emit_bench_json``). Nesting restores the outer collector."""
+    global _collector
+    prev, _collector = _collector, []
+    try:
+        yield _collector
+    finally:
+        _collector = prev
+
+
+def emit_bench_json(name: str, rows: List[dict],
+                    out_dir: str = ".") -> str:
+    """Write ``BENCH_<name>.json`` (see benchmarks/README.md for the
+    schema). Returns the path written."""
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    doc = {
+        "schema_version": BENCH_SCHEMA_VERSION,
+        "mode": name,
+        "unix_time": time.time(),
+        "rows": rows,
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    return path
 
 
 @dataclasses.dataclass
@@ -34,6 +97,7 @@ class BenchContext:
     d: int = 32
     n_queries: int = 200
     seed: int = 0
+    smoke: bool = False    # CI smoke: modes trim sweeps / dataset floors
     _cache: Dict = dataclasses.field(default_factory=dict)
 
     def dataset(self, kind: str = "clustered") -> VectorDataset:

@@ -32,7 +32,8 @@ def _curves(ctx: BenchContext, storage: str, k: int = 10):
     ds = ctx.dataset("clustered")
     rows = []
     pag, _ = ctx.pag("clustered", p=0.2, lam=3.0, redundancy=4)
-    for L, npb in PAG_SWEEP:
+    pag_sweep = PAG_SWEEP[:2] if ctx.smoke else PAG_SWEEP
+    for L, npb in pag_sweep:
         cfg = SearchConfig(L=L, k=k, n_probe_max=npb, mode="async")
         store = ctx.pag_store("clustered", storage, pag, seed=1)
         ids, _, st = search_pag(pag, ds.d, ds.queries, store, cfg,
@@ -53,13 +54,13 @@ def _curves(ctx: BenchContext, storage: str, k: int = 10):
              f"fetches={st.n_distinct_fetches};probes={sum(st.n_probes)}")
 
     dk, dk_store, _ = ctx.diskann("clustered", storage)
-    for L in DK_SWEEP:
+    for L in (DK_SWEEP[:1] if ctx.smoke else DK_SWEEP):
         ids, _, lats = search_diskann(dk, ds.queries, dk_store, k=k, L=L)
         rows.append(("DiskANN", f"L{L}", recall_at_k(ids, ds.gt_ids, k),
                      1.0 / np.mean(lats)))
 
     sp, sp_store, _ = ctx.spann("clustered", storage)
-    for L, npb in SP_SWEEP:
+    for L, npb in (SP_SWEEP[:2] if ctx.smoke else SP_SWEEP):
         ids, _, lats = search_spann(sp, ds.queries, sp_store, k=k, L=L,
                                     n_probe_max=npb)
         rows.append(("SPANN", f"L{L}/p{npb}",
@@ -67,7 +68,7 @@ def _curves(ctx: BenchContext, storage: str, k: int = 10):
 
     if storage == "mem":
         hn, _ = ctx.hnsw("clustered")
-        for L in HN_SWEEP:
+        for L in (HN_SWEEP[:2] if ctx.smoke else HN_SWEEP):
             ids, _, lats = search_hnsw(hn, ds.queries, k=k, L=L)
             rows.append(("HNSW", f"L{L}", recall_at_k(ids, ds.gt_ids, k),
                          1.0 / np.mean(lats)))
@@ -85,8 +86,9 @@ def _inflight_saturation(ctx: BenchContext, storage: str = "dfs",
     ds = ctx.dataset("clustered")
     pag, _ = ctx.pag("clustered", p=0.2, lam=3.0, redundancy=4)
     print(f"\n== batched QPS vs max_inflight ({storage}) ==")
+    sweep = (1, 8, None) if ctx.smoke else INFLIGHT_SWEEP
     qps_by_m = {}
-    for m in INFLIGHT_SWEEP:
+    for m in sweep:
         cfg = SearchConfig(L=64, k=k, n_probe_max=32, mode="async",
                            max_inflight=m)
         store = ctx.pag_store("clustered", storage, pag, seed=1)
@@ -100,7 +102,7 @@ def _inflight_saturation(ctx: BenchContext, storage: str = "dfs",
         emit(f"qps_recall/{storage}/max_inflight/{tag}",
              1e6 / max(st.batch_qps(), 1e-9),
              f"batch_qps={st.batch_qps():.0f};recall={rec:.3f}")
-    sat = next((m for m in INFLIGHT_SWEEP if m is not None
+    sat = next((m for m in sweep if m is not None
                 and qps_by_m[m] >= 0.9 * qps_by_m[None]), None)
     print(f"  >> saturates (>=90% of unlimited) at max_inflight={sat}")
     emit(f"qps_recall/{storage}/inflight_saturation", 0.0, f"at={sat}")
@@ -126,8 +128,13 @@ def pq_main(ctx: BenchContext):
     from repro.storage.simulator import ObjectStore, StorageConfig
 
     # >= 8000 points: below that the partitions (cap = lam/p) get too
-    # small for the probe/refine byte asymmetry to show
-    n, d, nq, k = max(ctx.n, 8000), 64, min(ctx.n_queries, 40), 10
+    # small for the probe/refine byte asymmetry to show. Smoke runs take
+    # ctx.n as-is (artifact plumbing check, not a byte-bill measurement).
+    if ctx.smoke:
+        n, d, nq, k = ctx.n, 64, min(ctx.n_queries, 20), 10
+    else:
+        n, d, nq, k = max(ctx.n, 8000), 64, min(ctx.n_queries, 40), 10
+    rerank_sweep = PQ_RERANK_SWEEP[-1:] if ctx.smoke else PQ_RERANK_SWEEP
     rng = np.random.default_rng(ctx.seed)
     cents = rng.standard_normal((40, d)).astype(np.float32) * 4
     base = (cents[rng.integers(0, 40, n)] + rng.standard_normal(
@@ -159,7 +166,7 @@ def pq_main(ctx: BenchContext):
         emit(f"qps_recall/pq/float/{engine}", 1e6 / st.batch_qps(),
              f"recall={rec:.3f};bytes_per_q={by:.0f};"
              f"batch_qps={st.batch_qps():.0f};p99_ms={st.p99()*1e3:.3f}")
-    for rk in PQ_RERANK_SWEEP:
+    for rk in rerank_sweep:
         for engine in ("per_query", "batched"):
             rec, by, st = run(SearchConfig(k=k, n_probe_max=32,
                                            engine=engine,
@@ -173,7 +180,7 @@ def pq_main(ctx: BenchContext):
                  f"recall={rec:.3f};bytes_per_q={by:.0f};"
                  f"batch_qps={st.batch_qps():.0f};"
                  f"p99_ms={st.p99()*1e3:.3f};bytes_ratio={ratio:.2f}")
-            if engine == "per_query" and rk == max(PQ_RERANK_SWEEP):
+            if engine == "per_query" and rk == max(rerank_sweep):
                 emit("qps_recall/pq/acceptance", 0.0,
                      f"bytes_ratio={ratio:.2f};recall={rec:.3f}")
                 print(f"  >> bytes/query cut {ratio:.1f}x vs float "

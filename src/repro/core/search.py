@@ -85,7 +85,8 @@ object's id column bit-casts ``int32`` ids into the ``float32`` column
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+import time
+from typing import Dict, Iterable, List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -93,6 +94,8 @@ import numpy as np
 from repro.core.graph_search import greedy_search
 from repro.core.pag import PAG
 from repro.kernels import ops
+from repro.obs import get_metrics, get_tracer
+from repro.obs.metrics import COUNT_BUCKETS
 from repro.storage.resilience import (
     FetchOutcome,
     ResiliencePolicy,
@@ -221,6 +224,24 @@ class DegradedInfo:
         self.corruptions += oc.corruptions
         self.breaker_skips += oc.breaker_skips
 
+    @classmethod
+    def merge(cls, infos: Iterable["DegradedInfo"]) -> "DegradedInfo":
+        """Batch-level aggregation: sum the per-query damage counters
+        (``breakers_open`` is a post-fetch snapshot shared by the whole
+        batch, so it takes the max, not the sum). The one place the
+        seven fields are summed — callers must not hand-roll this."""
+        out = cls()
+        for d in infos:
+            out.n_probes_wanted += d.n_probes_wanted
+            out.n_probes_lost += d.n_probes_lost
+            out.retries += d.retries
+            out.failovers += d.failovers
+            out.timeouts += d.timeouts
+            out.corruptions += d.corruptions
+            out.breaker_skips += d.breaker_skips
+            out.breakers_open = max(out.breakers_open, d.breakers_open)
+        return out
+
 
 @dataclasses.dataclass
 class SearchStats:
@@ -238,11 +259,15 @@ class SearchStats:
     def n_degraded_queries(self) -> int:
         return sum(1 for d in self.degraded if d.degraded)
 
+    def degraded_total(self) -> DegradedInfo:
+        """The batch's merged damage report (``DegradedInfo.merge``)."""
+        return DegradedInfo.merge(self.degraded)
+
     def total_retries(self) -> int:
-        return sum(d.retries for d in self.degraded)
+        return self.degraded_total().retries
 
     def total_failovers(self) -> int:
-        return sum(d.failovers for d in self.degraded)
+        return self.degraded_total().failovers
 
     def qps(self) -> float:
         lat = np.asarray(self.latencies_s)
@@ -313,10 +338,18 @@ def _scan_pools(queries: np.ndarray, pool_ids: List[np.ndarray],
         if n:
             ids_pad[qi, :n] = pool_ids[qi]
             vecs_pad[qi, :n] = pool_vecs[qi]
+    tracer = get_tracer()
+    t0 = time.perf_counter() if tracer.enabled else 0.0
     d2, ids = ops.l2_topk_masked(
         jnp.asarray(queries, jnp.float32), jnp.asarray(vecs_pad),
         jnp.asarray(ids_pad), k=k, block_c=scan_block)
-    return np.asarray(ids).astype(np.int64), np.asarray(d2)
+    out = np.asarray(ids).astype(np.int64), np.asarray(d2)
+    if tracer.enabled:      # np.asarray forced the async dispatch above
+        dt = time.perf_counter() - t0
+        tracer.wall_span("pallas_launch l2_topk", dt,
+                         {"queries": q_count, "c_max": c_max, "k": k})
+        get_metrics().observe("kernels.launch_s", dt)
+    return out
 
 
 def _resolve_resilient(store: ObjectStore, cfg: SearchConfig
@@ -421,32 +454,40 @@ def _fetch_per_query(probes_all: List[List[int]], rkeys_of,
                      cfg: SearchConfig, dead_shard_fallback: bool,
                      cache: Optional[object],
                      timelines: List[QueryTimeline],
-                     degraded: List[DegradedInfo], scan_cost
+                     degraded: List[DegradedInfo], scan_cost,
+                     kind: str = "scan"
                      ) -> Tuple[Dict[int, np.ndarray], int]:
     """The seed data plane, one wave: blocking per-partition GETs, query
     by query (no cross-query coalescing — a partition probed by two
     queries is fetched twice unless a cache serves the second). Charges
     each query's timeline (``scan_cost(obj) -> seconds`` per scan) and
-    fills per-query ``DegradedInfo``. Returns (objs, n_store_fetches)."""
+    fills per-query ``DegradedInfo``. ``kind`` labels the wave's spans
+    on the trace ("adc" probe wave vs "exact" refine wave). Returns
+    (objs, n_store_fetches)."""
     objs: Dict[int, np.ndarray] = {}
     n_store = 0
     for qi, probes in enumerate(probes_all):
         for pid in probes:
             key = rkeys_of(pid)[0]
+            oc = None
             cached = cache.get(key) if cache is not None else None
             if cached is not None:
                 obj, io_lat = cached, 0.0  # local-memory hit
+                label = f"hit p{pid}"
             elif resilient is not None:
                 oc = resilient.get_replicated(
                     rkeys_of(pid), hedge_after_s=cfg.hedge_after_s)
                 degraded[qi].add_outcome(oc)
                 if not oc.ok:
                     degraded[qi].n_probes_lost += 1
-                    timelines[qi].issue_io(oc.elapsed_s, 0.0)
+                    timelines[qi].issue_io(oc.elapsed_s, 0.0,
+                                           label=f"lost p{pid}",
+                                           detail=oc)
                     if dead_shard_fallback:
                         continue  # degraded: budget burned, no data
                     raise KeyError(f"partition lost: {key}")
                 obj, io_lat = oc.value, oc.elapsed_s
+                label = f"{kind} p{pid}"
                 n_store += 1
                 if cache is not None:
                     cache.put(key, obj)
@@ -462,11 +503,13 @@ def _fetch_per_query(probes_all: List[List[int]], rkeys_of,
                     if dead_shard_fallback:
                         continue  # degraded: skip dead partition
                     raise
+                label = f"{kind} p{pid}"
                 n_store += 1
                 if cache is not None and store.verify(key, obj):
                     cache.put(key, obj)  # no corrupt admission
             objs[pid] = obj
-            timelines[qi].issue_io(io_lat, scan_cost(obj))
+            timelines[qi].issue_io(io_lat, scan_cost(obj),
+                                   label=label, detail=oc)
     return objs, n_store
 
 
@@ -570,10 +613,18 @@ def _adc_select(codebook, queries: np.ndarray,
             codes_pad[qi, :n] = cand_codes[qi]
             pos_pad[qi, :n] = np.arange(n, dtype=np.int32)
     luts = adc_lut_batch(codebook, np.asarray(queries, np.float32))
+    tracer = get_tracer()
+    t0 = time.perf_counter() if tracer.enabled else 0.0
     _, pos = ops.pq_adc_masked(
         jnp.asarray(luts), jnp.asarray(codes_pad), jnp.asarray(pos_pad),
         k=rerank_k, block_c=scan_block)
     pos = np.asarray(pos)
+    if tracer.enabled:      # np.asarray forced the async dispatch above
+        dt = time.perf_counter() - t0
+        tracer.wall_span("pallas_launch pq_adc", dt,
+                         {"queries": q_count, "c_max": c_max, "M": m,
+                          "rerank_k": rerank_k})
+        get_metrics().observe("kernels.launch_s", dt)
 
     refine_all: List[List[int]] = []
     for qi in range(q_count):
@@ -598,11 +649,14 @@ def _charge_probers(order: List[int], probers: Dict[int, List[int]],
                     objs: Dict[int, np.ndarray], lat: Dict[int, float],
                     outcomes: Dict[int, FetchOutcome],
                     timelines: List[QueryTimeline],
-                    degraded: List[DegradedInfo], scan_cost):
+                    degraded: List[DegradedInfo], scan_cost,
+                    kind: str = "scan"):
     """Per-query accounting of one coalesced wave: every prober is
     charged the shared fetch chain's cost (latency incl.
     retries/failovers) and its own scan (``scan_cost(obj) -> s``); lost
-    partitions are reported."""
+    partitions are reported. ``kind`` labels the wave's spans on the
+    trace; a partition with no fetch outcome was served by the cache
+    (``hit``)."""
     for pid in order:
         oc = outcomes.get(pid)
         for qi in probers[pid]:
@@ -613,10 +667,14 @@ def _charge_probers(order: List[int], probers: Dict[int, List[int]],
         if pid not in objs:
             if oc is not None and oc.elapsed_s > 0:
                 for qi in probers[pid]:  # failed chain burned budget
-                    timelines[qi].issue_io(oc.elapsed_s, 0.0)
+                    timelines[qi].issue_io(oc.elapsed_s, 0.0,
+                                           label=f"lost p{pid}",
+                                           detail=oc)
             continue
+        label = f"{kind} p{pid}" if oc is not None else f"hit p{pid}"
         for qi in probers[pid]:
-            timelines[qi].issue_io(lat[pid], scan_cost(objs[pid]))
+            timelines[qi].issue_io(lat[pid], scan_cost(objs[pid]),
+                                   label=label, detail=oc)
 
 
 def search_pag(pag: PAG, x_dim: int, queries: np.ndarray,
@@ -661,8 +719,11 @@ def search_pag(pag: PAG, x_dim: int, queries: np.ndarray,
         raise ValueError(f"unknown compression: {cfg.compression!r}")
     pq = cfg.compression == "pq"
 
+    tracer = get_tracer()
+    metrics = get_metrics()
+    rec = tracer.enabled   # keep the per-event schedule for the spans
     resilient = _resolve_resilient(store, cfg)
-    timelines = [QueryTimeline() for _ in range(q_count)]
+    timelines = [QueryTimeline(record=rec) for _ in range(q_count)]
     degraded = [DegradedInfo(n_probes_wanted=len(probes_all[qi]))
                 for qi in range(q_count)]
     for qi in range(q_count):
@@ -682,7 +743,7 @@ def search_pag(pag: PAG, x_dim: int, queries: np.ndarray,
             probes_all = [[] for _ in range(q_count)]
         if cb_lat > 0:  # shared metadata fetch: charged to every query
             for qi in range(q_count):
-                timelines[qi].issue_io(cb_lat, 0.0)
+                timelines[qi].issue_io(cb_lat, 0.0, label="codebook")
 
     # probe wave: code objects under "pq" compression, else residuals.
     # The ADC scan of a code object costs scan(cnt, M); exact scans
@@ -694,33 +755,39 @@ def search_pag(pag: PAG, x_dim: int, queries: np.ndarray,
 
     fobjs: Dict[int, np.ndarray] = {}
     refine_all: List[List[int]] = [[] for _ in range(q_count)]
+    probe_kind = "adc" if pq else "scan"
+    bt: Optional[QueryTimeline] = None
 
     if cfg.engine == "batched":
         objs, lat, probers, order, n_store, outcomes = _fetch_batched(
             probes_all, key_fn, store, resilient, cfg,
             dead_shard_fallback, cfg.cache)
         _charge_probers(order, probers, objs, lat, outcomes, timelines,
-                        degraded, probe_cost)
+                        degraded, probe_cost, kind=probe_kind)
         # batch event clock: a fetch issues when its FIRST prober's
         # traversal retires; one coalesced scan per distinct partition
-        bt = QueryTimeline()
+        bt = QueryTimeline(record=rec)
         if cb_lat > 0:
-            bt.issue_io(cb_lat, 0.0)
+            bt.issue_io(cb_lat, 0.0, label="codebook")
         first_prober = {pid: probers[pid][0] for pid in order}
         for qi in range(q_count):
-            bt.add_compute(traversal_s[qi])
+            bt.add_compute(traversal_s[qi], label=f"traversal q{qi}")
             for pid in probes_all[qi]:
                 if first_prober[pid] != qi:
                     continue
                 if pid in objs:
                     o = objs[pid]
+                    hit = outcomes.get(pid) is None  # cache-served
                     bt.issue_io(lat[pid], compute.scan_batched(
                         o.shape[0], o.shape[1] if pq else x_dim,
-                        len(probers[pid])))
+                        len(probers[pid])),
+                        label=f"{'hit' if hit else probe_kind} p{pid}",
+                        detail=outcomes.get(pid))
                 else:
                     oc = outcomes.get(pid)
                     if oc is not None and oc.elapsed_s > 0:
-                        bt.issue_io(oc.elapsed_s, 0.0)  # burned budget
+                        bt.issue_io(oc.elapsed_s, 0.0,  # burned budget
+                                    label=f"lost p{pid}", detail=oc)
         n_distinct = n_store + cb_fetch
         if pq:
             if codebook is not None and objs:
@@ -736,16 +803,19 @@ def search_pag(pag: PAG, x_dim: int, queries: np.ndarray,
                 _fetch_batched(refine_all, rkeys_of, store, resilient,
                                cfg, dead_shard_fallback, None)
             _charge_probers(forder, fprobers, fobjs, flat, foutcomes,
-                            timelines, degraded, exact_cost)
+                            timelines, degraded, exact_cost,
+                            kind="exact")
             for pid in forder:
                 if pid in fobjs:
                     bt.issue_io(flat[pid], compute.scan_batched(
                         fobjs[pid].shape[0], x_dim,
-                        len(fprobers[pid])))
+                        len(fprobers[pid])), label=f"exact p{pid}",
+                        detail=foutcomes.get(pid))
                 else:
                     oc = foutcomes.get(pid)
                     if oc is not None and oc.elapsed_s > 0:
-                        bt.issue_io(oc.elapsed_s, 0.0)  # burned budget
+                        bt.issue_io(oc.elapsed_s, 0.0,  # burned budget
+                                    label=f"lost p{pid}", detail=oc)
             n_distinct += fn_store
         batch_span = bt.finish_async() if cfg.mode == "async" \
             else bt.finish_sync()
@@ -754,7 +824,7 @@ def search_pag(pag: PAG, x_dim: int, queries: np.ndarray,
         objs, n_store = _fetch_per_query(
             probes_all, key_fn, store, resilient, cfg,
             dead_shard_fallback, cfg.cache, timelines, degraded,
-            probe_cost)
+            probe_cost, kind=probe_kind)
         n_distinct = n_store + cb_fetch
         if pq:
             if codebook is not None and objs:
@@ -766,7 +836,7 @@ def search_pag(pag: PAG, x_dim: int, queries: np.ndarray,
             fobjs, fn_store = _fetch_per_query(
                 refine_all, rkeys_of, store, resilient, cfg,
                 dead_shard_fallback, None, timelines, degraded,
-                exact_cost)
+                exact_cost, kind="exact")
             n_distinct += fn_store
         batch_span = None  # serial stream: filled from latencies below
     else:
@@ -820,4 +890,22 @@ def search_pag(pag: PAG, x_dim: int, queries: np.ndarray,
         stats.n_hops.append(int(hops[qi]))
     stats.batch_span_s = batch_span if batch_span is not None \
         else float(np.sum(stats.latencies_s))
+    if metrics.enabled:
+        metrics.inc("search.batches")
+        metrics.inc("search.queries", q_count)
+        for qi in range(q_count):
+            metrics.observe("search.latency_s", stats.latencies_s[qi])
+            metrics.observe("search.pool_size", len(pool_ids[qi]),
+                            bounds=COUNT_BUCKETS)
+            metrics.observe("search.retries_per_query",
+                            degraded[qi].retries, bounds=COUNT_BUCKETS)
+        metrics.observe("search.batch_span_s", stats.batch_span_s)
+    if rec:
+        from repro.obs.trace import emit_search_spans
+        emit_search_spans(
+            tracer,
+            batch_events=(bt.events if bt is not None else None),
+            batch_span_s=stats.batch_span_s, timelines=timelines,
+            latencies_s=stats.latencies_s, engine=cfg.engine, pq=pq,
+            n_probes=stats.n_probes)
     return out_ids, out_d2, stats

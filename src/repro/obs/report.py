@@ -1,0 +1,68 @@
+"""Text reporting over a recorded trace: per-batch timeline breakdowns.
+
+``timeline_breakdown`` folds a ``Tracer``'s span tree into one table per
+batch root: how the batch span divides between traversal compute, fetch
+stalls, and partition scans (the compute-thread slices tile the root
+exactly, so the percentages sum to ~100%), plus the async stage extents
+(fetch/refine waves, ADC pass) that overlap the compute thread. This is
+the quick look — load the ``trace.json`` in Perfetto for the full tree.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.obs.trace import Span, Tracer
+
+# compute-thread categories tile the batch root span
+_TILE_CATS = ("compute", "stall", "scan")
+_CAT_LABEL = {"compute": "traversal", "stall": "fetch stall",
+              "scan": "scan"}
+
+
+def _fmt_s(t: float) -> str:
+    if t >= 1.0:
+        return f"{t:8.3f}s "
+    if t >= 1e-3:
+        return f"{t * 1e3:8.3f}ms"
+    return f"{t * 1e6:8.3f}us"
+
+
+def batch_breakdown(tracer: Tracer, root: Span) -> str:
+    """One batch root -> a small text table (see module docstring)."""
+    kids = [s for s in tracer.spans
+            if s.track == root.track and s is not root]
+    tile: Dict[str, float] = {c: 0.0 for c in _TILE_CATS}
+    for s in kids:
+        if s.ph == "X" and s.cat in tile:
+            tile[s.cat] += s.dur_s
+    total = root.dur_s or 1.0
+    covered = sum(tile.values())
+    args = root.args or {}
+    head = (f"{root.track}: {root.name} engine={args.get('engine', '?')}"
+            f" pq={args.get('pq', '?')}  span {_fmt_s(root.dur_s).strip()}")
+    lines = [head]
+    for cat in _TILE_CATS:
+        lines.append(f"  {_CAT_LABEL[cat]:<12}{_fmt_s(tile[cat])}"
+                     f"  {100.0 * tile[cat] / total:5.1f}%")
+    slack = root.dur_s - covered
+    if slack > 1e-12:  # untiled remainder (per_query idle tail etc.)
+        lines.append(f"  {'other':<12}{_fmt_s(slack)}"
+                     f"  {100.0 * slack / total:5.1f}%")
+    stages = [s for s in kids if s.ph == "b" and s.cat == "stage"]
+    for s in sorted(stages, key=lambda s: s.t0_s):
+        lines.append(f"  ~ {s.name:<12}{_fmt_s(s.dur_s)}"
+                     f"  [{_fmt_s(s.t0_s).strip()} .."
+                     f" {_fmt_s(s.t1_s).strip()}] (overlaps compute)")
+    return "\n".join(lines)
+
+
+def timeline_breakdown(tracer: Tracer) -> str:
+    """Every batch root in the trace, one breakdown table each."""
+    roots = tracer.roots("batch")
+    if not roots:
+        return "(no batch spans recorded)"
+    out: List[str] = [batch_breakdown(tracer, r) for r in roots]
+    if tracer.n_dropped:
+        out.append(f"({tracer.n_dropped} spans dropped over"
+                   f" track/span caps)")
+    return "\n\n".join(out)

@@ -6,6 +6,7 @@ two halves of the RAG-serving integration (examples/rag_serve.py).
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -14,6 +15,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import decode_step, prefill
+from repro.obs import get_metrics, get_tracer
+from repro.obs.metrics import COUNT_BUCKETS
 
 
 @dataclasses.dataclass
@@ -92,13 +95,16 @@ class AnnsFrontend:
         self.compute = compute
         self.results: Dict[int, Tuple[np.ndarray, np.ndarray, float]] = {}
         self.degraded: Dict[int, object] = {}   # ticket -> DegradedInfo
-        self._pending: List[Tuple[int, np.ndarray]] = []
+        self.queue_wait_s: Dict[int, float] = {}  # ticket -> wall wait
+        self._pending: List[Tuple[int, np.ndarray, float]] = []
         self._next_ticket = 0
+        self._clock_s = 0.0     # event-clock cursor: flushes lay end-to-end
 
     def submit(self, query: np.ndarray) -> int:
         ticket = self._next_ticket
         self._next_ticket += 1
-        self._pending.append((ticket, np.asarray(query)))
+        self._pending.append((ticket, np.asarray(query),
+                              time.perf_counter()))
         if len(self._pending) >= self.max_batch:
             self.flush()
         return ticket
@@ -108,15 +114,46 @@ class AnnsFrontend:
         accumulates into ``results``) ticket -> (ids, d2, latency_s)."""
         if not self._pending:
             return self.results
-        tickets = [t for t, _ in self._pending]
-        batch = np.stack([q for _, q in self._pending])
+        tracer, metrics = get_tracer(), get_metrics()
+        now = time.perf_counter()
+        tickets = [t for t, _, _ in self._pending]
+        batch = np.stack([q for _, q, _ in self._pending])
+        waits = [now - t0 for _, _, t0 in self._pending]
         self._pending = []
         ids, d2, stats = self.serving.search(batch, self.cfg,
                                              compute=self.compute)
         for row, ticket in enumerate(tickets):
             self.results[ticket] = (ids[row], d2[row],
                                     stats.latencies_s[row])
+            self.queue_wait_s[ticket] = waits[row]
             if stats.degraded:
                 self.degraded[ticket] = stats.degraded[row]
         self.last_stats = stats
+        if metrics.enabled:
+            metrics.inc("frontend.flushes")
+            metrics.observe("frontend.batch_size", len(tickets),
+                            bounds=COUNT_BUCKETS)
+            for w in waits:
+                metrics.observe("frontend.queue_wait_s", w)
+        if tracer.enabled:
+            # flushes lay end-to-end on the frontend's event clock;
+            # ticket slices stack (aspan) since they start together
+            t0 = self._clock_s
+            tracer.span("frontend", f"flush[{len(tickets)}q]", t0,
+                        stats.batch_span_s, cat="flush",
+                        args={"tickets": len(tickets)})
+            for row, ticket in enumerate(tickets):
+                tracer.aspan("frontend", f"t{ticket}", t0,
+                             stats.latencies_s[row], cat="ticket",
+                             args={"queue_wait_s": waits[row]})
+        self._clock_s += stats.batch_span_s
         return self.results
+
+    def degraded_summary(self):
+        """Batch-level ``DegradedInfo`` aggregated over every flushed
+        ticket (see ``DegradedInfo.merge``); None when the search plane
+        reported no per-query damage records."""
+        if not self.degraded:
+            return None
+        from repro.core.search import DegradedInfo
+        return DegradedInfo.merge(self.degraded.values())

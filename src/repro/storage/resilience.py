@@ -41,10 +41,11 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import heapq
-from typing import Dict, Hashable, List, Optional, Sequence
+from typing import Dict, Hashable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs import get_metrics, get_tracer
 from repro.storage.simulator import ObjectStore
 
 
@@ -121,6 +122,11 @@ class CircuitBreaker:
         self._skips_left = 0
         self.n_trips = 0
 
+    def _transition(self, state: str):
+        if state != self.state:
+            get_metrics().inc(f"breaker.to_{state}")
+        self.state = state
+
     def allow(self) -> bool:
         """May a request be routed to this shard right now? While open,
         each call consumes one unit of cooldown; when the cooldown is
@@ -129,18 +135,18 @@ class CircuitBreaker:
             if self._skips_left > 0:
                 self._skips_left -= 1
                 return False
-            self.state = self.HALF_OPEN
+            self._transition(self.HALF_OPEN)
         return True
 
     def record_success(self):
         self._fails = 0
-        self.state = self.CLOSED
+        self._transition(self.CLOSED)
 
     def record_failure(self):
         self._fails += 1
         if self.state == self.HALF_OPEN or \
                 self._fails >= self.fail_threshold:
-            self.state = self.OPEN
+            self._transition(self.OPEN)
             self._skips_left = self.cooldown_requests
             self._fails = 0
             self.n_trips += 1
@@ -158,6 +164,10 @@ class FetchOutcome:
     timeouts: int = 0
     corruptions: int = 0
     breaker_skips: int = 0
+    # tracing only (None unless a tracer is installed): the chain's
+    # internal schedule as (name, t0, t1) relative to the chain start —
+    # attempts, backoff waits, timeouts, failover boundaries
+    events: Optional[List[Tuple[str, float, float]]] = None
 
 
 class ResilientStore:
@@ -208,7 +218,12 @@ class ResilientStore:
         a chain that exhausts replicas/attempts/deadline returns
         ``ok=False`` with the time it burned."""
         p = self.policy
+        m = get_metrics()
         oc = FetchOutcome()
+        # chain sub-events for the span tracer, relative to chain start;
+        # only allocated when a tracer is installed (zero-cost default)
+        evs = [] if get_tracer().enabled else None
+        oc.events = evs
         t = 0.0
         total = 0
         attempted_prev = False
@@ -219,23 +234,34 @@ class ResilientStore:
             if not br.allow():
                 oc.breaker_skips += 1
                 self.n_breaker_skips += 1
+                m.inc("resilience.breaker_skips")
+                if evs is not None:
+                    evs.append((f"breaker_skip r{r}", t, t))
                 continue
             if attempted_prev:
                 oc.failovers += 1
                 self.n_failovers += 1
+                m.inc("resilience.failovers")
+                if evs is not None:
+                    evs.append((f"failover r{r}", t, t))
             for a in range(p.max_attempts_per_replica):
                 if total >= p.max_total_attempts:
                     break
                 if total > 0:          # backoff before every re-attempt
-                    t += p.backoff(key, total)
+                    b = p.backoff(key, total)
+                    if evs is not None:
+                        evs.append(("backoff", t, t + b))
+                    t += b
                 if t >= p.deadline_s:  # budget burned waiting
                     t = p.deadline_s
                     break
                 if a > 0:
                     oc.retries += 1
                     self.n_retries += 1
+                    m.inc("resilience.retries")
                 total += 1
                 attempted_prev = True
+                t_try = t
                 try:
                     if hedge_after_s is not None:
                         v, lat = self.store.get_hedged(
@@ -246,26 +272,39 @@ class ResilientStore:
                 except KeyError:
                     t += self._error_cost()
                     br.record_failure()
+                    if evs is not None:
+                        evs.append((f"error r{r}a{a}", t_try, t))
                     continue
                 if lat > p.request_timeout_s:
                     t += p.request_timeout_s   # cancelled at the timeout
                     oc.timeouts += 1
                     self.n_timeouts += 1
+                    m.inc("resilience.timeouts")
                     br.record_failure()
+                    if evs is not None:
+                        evs.append((f"timeout r{r}a{a}", t_try, t))
                     continue
                 t += lat
                 if p.verify_checksums and not self.store.verify(key, v):
                     oc.corruptions += 1
                     self.n_corruptions += 1
+                    m.inc("resilience.corruptions")
                     br.record_failure()
+                    if evs is not None:
+                        evs.append((f"corrupt r{r}a{a}", t_try, t))
                     continue
                 br.record_success()
                 oc.value, oc.ok = v, True
                 oc.replica_used = r
                 oc.elapsed_s = t
+                if evs is not None:
+                    evs.append((f"get r{r}a{a}", t_try, t))
                 return oc
         oc.elapsed_s = min(t, p.deadline_s)
-        self.n_deadline_giveups += 1 if t >= p.deadline_s else 0
+        if t >= p.deadline_s:
+            self.n_deadline_giveups += 1
+            m.inc("resilience.deadline_giveups")
+        m.inc("resilience.failed_chains")
         return oc
 
     def get_many_replicated(

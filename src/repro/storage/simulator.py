@@ -38,6 +38,9 @@ from typing import Dict, Iterable, List, Mapping, Optional, Tuple
 
 import numpy as np
 
+from repro.obs import get_metrics
+from repro.obs.metrics import BYTE_BUCKETS, COUNT_BUCKETS
+
 
 class TransientError(KeyError):
     """A retryable storage error (network blip, flapping shard). Subclass
@@ -193,14 +196,17 @@ class ObjectStore:
         plan is sticky)."""
         for p in self._dead_prefixes:
             if key.startswith(p):
+                get_metrics().inc("storage.dead_shard_errors")
                 raise KeyError(f"shard down: {key}")
         plan = self.fault_plan
         if plan is not None:
             for pref, (t0, t1) in plan.flap_windows.items():
                 if key.startswith(pref) and t0 <= now_s < t1:
+                    get_metrics().inc("storage.transient_errors")
                     raise TransientError(f"shard flapping: {key}")
             if plan.transient_p > 0 and \
                     plan._u(key, attempt, "err") < plan.transient_p:
+                get_metrics().inc("storage.transient_errors")
                 raise TransientError(f"transient error: {key}")
         v = self._data[key]
         self.n_gets += 1
@@ -216,6 +222,11 @@ class ObjectStore:
             if plan.corrupt_p > 0 and \
                     plan._u(key, attempt, "crp") < plan.corrupt_p:
                 v = self._corrupted(key, v)
+        m = get_metrics()
+        m.inc("storage.gets")
+        m.inc("storage.bytes_fetched", v.nbytes)
+        m.observe("storage.rpc_latency_s", lat)
+        m.observe("storage.object_bytes", v.nbytes, BYTE_BUCKETS)
         return v, lat
 
     def get_hedged(self, key: str, hedge_after_s: float,
@@ -230,6 +241,10 @@ class ObjectStore:
             return v, lat1
         self.n_gets += 1
         self.bytes_fetched += v.nbytes
+        m = get_metrics()
+        m.inc("storage.gets")
+        m.inc("storage.hedged_duplicates")
+        m.inc("storage.bytes_fetched", v.nbytes)
         lat2 = hedge_after_s + self._latency(v.nbytes)
         return v, min(lat1, lat2)
 
@@ -280,6 +295,9 @@ class ObjectStore:
                 heapq.heappush(inflight, issue + lat)
             out[key] = (v, issue + lat)
         self.n_batch_gets += 1
+        m = get_metrics()
+        m.inc("storage.batch_gets")
+        m.observe("storage.wave_keys", len(out), COUNT_BUCKETS)
         return out
 
 
@@ -315,38 +333,131 @@ class FetchRecord:
     issue_s: float      # compute-cursor time the GET was issued (async)
     latency_s: float    # simulated storage latency
     scan_cost_s: float  # full-scan compute once the partition arrives
+    label: str = ""     # tracing label ("adc p12", "hit p3", "codebook")
+    detail: object = None   # tracing payload (e.g. a FetchOutcome)
+
+
+@dataclasses.dataclass
+class TimelineEvent:
+    """One resolved interval of a query's schedule (tracing only).
+    ``kind``: "compute" (traversal on the compute thread), "io" (a fetch
+    in flight — overlaps compute in async mode), "stall" (compute thread
+    waiting on an arrival), "scan" (partition scan on the compute
+    thread). compute/stall/scan tile the timeline exactly; io floats."""
+    kind: str
+    t0_s: float
+    t1_s: float
+    label: str = ""
+    stage: int = 0      # barrier-delimited stage (0 = probe, 1 = refine)
+    detail: object = None
+
+    @property
+    def dur_s(self) -> float:
+        return self.t1_s - self.t0_s
 
 
 @dataclasses.dataclass
 class QueryTimeline:
     """Event-clock for one query: a single compute thread (traversal then
-    scans) overlapped with asynchronous storage fetches (Alg 5)."""
+    scans) overlapped with asynchronous storage fetches (Alg 5).
+
+    ``record=True`` additionally keeps the *resolved schedule* as
+    ``TimelineEvent``s (``events``) for the span tracer: compute is
+    recorded eagerly; io/stall/scan intervals are derived by the same
+    resolution loop that computes ``finish_async``/``finish_sync`` —
+    one algorithm, so traced totals are bit-identical to untraced ones.
+    """
     compute_s: float = 0.0          # traversal compute consumed so far
     fetches: List[FetchRecord] = dataclasses.field(default_factory=list)
+    record: bool = False
+    events: List[TimelineEvent] = \
+        dataclasses.field(default_factory=list)
+    stage: int = 0                  # incremented at every barrier
+    _finished: bool = False         # events already flushed by finish_*
 
-    def add_compute(self, dt: float):
+    def add_compute(self, dt: float, label: str = "traversal"):
+        if self.record and dt > 0:
+            self.events.append(TimelineEvent(
+                "compute", self.compute_s, self.compute_s + dt, label,
+                self.stage))
         self.compute_s += dt
 
-    def issue_io(self, latency: float, scan_cost: float):
-        self.fetches.append(FetchRecord(self.compute_s, latency, scan_cost))
+    def issue_io(self, latency: float, scan_cost: float,
+                 label: str = "", detail: object = None):
+        self.fetches.append(FetchRecord(self.compute_s, latency,
+                                        scan_cost, label, detail))
 
-    def finish_async(self) -> float:
-        """Alg 5: fetch issued mid-traversal at its issue time; scans run
-        on the compute thread as data arrives (after traversal ends)."""
+    def _resolve(self, mode: str,
+                 events: Optional[List[TimelineEvent]] = None) -> float:
+        """Resolve the outstanding fetches into a schedule; returns the
+        finish time and (optionally) appends the io/stall/scan events.
+        This is THE event-clock algorithm — finish_async/finish_sync and
+        the tracer all go through it."""
+        if mode == "sync":
+            # blocking: all fetches issued after traversal, awaited
+            # together; scans back-to-back afterwards
+            if not self.fetches:
+                return self.compute_s
+            start = self.compute_s + max(f.latency_s
+                                         for f in self.fetches)
+            if events is not None:
+                for f in self.fetches:
+                    events.append(TimelineEvent(
+                        "io", self.compute_s,
+                        self.compute_s + f.latency_s, f.label,
+                        self.stage, f.detail))
+                if start > self.compute_s:
+                    events.append(TimelineEvent(
+                        "stall", self.compute_s, start, "stall",
+                        self.stage))
+            if events is not None:
+                t = start
+                for f in self.fetches:
+                    if f.scan_cost_s > 0:
+                        events.append(TimelineEvent(
+                            "scan", t, t + f.scan_cost_s, f.label,
+                            self.stage))
+                    t += f.scan_cost_s
+            # seed fold order (start + sum(costs)): keep bit-identical
+            return start + sum(f.scan_cost_s for f in self.fetches)
+        # async (Alg 5): fetch issued mid-traversal at its issue time;
+        # scans run on the compute thread as data arrives. Sort key
+        # matches the seed implementation — (ready, cost) — so resolved
+        # totals are bit-identical in latency-tie cases (cache hits).
         t = self.compute_s
-        arrivals = sorted((f.issue_s + f.latency_s, f.scan_cost_s)
-                          for f in self.fetches)
-        for ready, cost in arrivals:
-            t = max(t, ready) + cost
+        for f in sorted(self.fetches,
+                        key=lambda f: (f.issue_s + f.latency_s,
+                                       f.scan_cost_s)):
+            ready = f.issue_s + f.latency_s
+            if events is not None:
+                events.append(TimelineEvent("io", f.issue_s, ready,
+                                            f.label, self.stage,
+                                            f.detail))
+                if ready > t:
+                    events.append(TimelineEvent("stall", t, ready,
+                                                "stall", self.stage))
+            start = max(t, ready)
+            if events is not None and f.scan_cost_s > 0:
+                events.append(TimelineEvent(
+                    "scan", start, start + f.scan_cost_s, f.label,
+                    self.stage))
+            t = start + f.scan_cost_s
         return t
 
+    def finish_async(self) -> float:
+        """Alg 5 finish time; flushes events once when recording."""
+        return self._finish("async")
+
     def finish_sync(self) -> float:
-        """Blocking baseline: all fetches issued only after traversal
-        completes, awaited together; scans back-to-back afterwards."""
-        if not self.fetches:
-            return self.compute_s
-        start = self.compute_s + max(f.latency_s for f in self.fetches)
-        return start + sum(f.scan_cost_s for f in self.fetches)
+        return self._finish("sync")
+
+    def _finish(self, mode: str) -> float:
+        evs = self.events if (self.record and not self._finished) \
+            else None
+        t = self._resolve(mode, evs)
+        if evs is not None:
+            self._finished = True
+        return t
 
     def barrier(self, mode: str = "async"):
         """Stage boundary (the two-stage compressed data plane): collapse
@@ -354,6 +465,7 @@ class QueryTimeline:
         only issue after all current-stage scans retired — e.g. the exact
         refine wave issues only once the ADC pass over the fetched code
         objects has completed."""
-        self.compute_s = self.finish_async() if mode == "async" \
-            else self.finish_sync()
+        self.compute_s = self._resolve(
+            mode, self.events if self.record else None)
         self.fetches = []
+        self.stage += 1

@@ -1,0 +1,324 @@
+"""Observability plane: tracer/metrics correctness and — the hard
+invariant — ZERO effect on the data plane: search results and
+``SearchStats`` must be bit-identical with tracing enabled, disabled,
+or never touched (the no-op default)."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.search import (
+    DegradedInfo,
+    SearchConfig,
+    search_pag,
+    write_partitions,
+)
+from repro.obs import get_metrics, get_tracer, observe
+from repro.obs.metrics import (
+    COUNT_BUCKETS,
+    NOOP_METRICS,
+    MetricsRegistry,
+)
+from repro.obs.report import timeline_breakdown
+from repro.obs.trace import NOOP_TRACER, Tracer
+from repro.storage.simulator import ObjectStore, StorageConfig
+
+ENGINES = ("batched", "per_query")
+
+
+def _mk_store(built_pag, small_ds, **kw):
+    store = ObjectStore(StorageConfig.preset("dfs", seed=1))
+    write_partitions(built_pag, small_ds.base, store, n_shards=4, **kw)
+    return store
+
+
+def _search(built_pag, small_ds, store, **cfg_kw):
+    cfg = SearchConfig(L=32, k=10, n_probe_max=16, **cfg_kw)
+    return search_pag(built_pag, small_ds.d, small_ds.queries[:16],
+                      store, cfg, n_shards=4)
+
+
+# ---------------------------------------------------------------- identity
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_tracing_disabled_is_bit_identical(built_pag, small_ds, engine):
+    # fresh identically-seeded store per run: the simulator's latency
+    # jitter RNG advances per call, so a shared store would differ
+    # between runs regardless of tracing
+    ids0, d20, st0 = _search(built_pag, small_ds,
+                             _mk_store(built_pag, small_ds),
+                             engine=engine)
+    with observe(tracer=Tracer(), metrics=MetricsRegistry()):
+        ids1, d21, st1 = _search(built_pag, small_ds,
+                                 _mk_store(built_pag, small_ds),
+                                 engine=engine)
+    ids2, d22, st2 = _search(built_pag, small_ds,
+                             _mk_store(built_pag, small_ds),
+                             engine=engine)
+    np.testing.assert_array_equal(ids0, ids1)
+    np.testing.assert_array_equal(d20, d21)
+    np.testing.assert_array_equal(ids0, ids2)
+    assert st0.latencies_s == st1.latencies_s == st2.latencies_s
+    assert st0.batch_span_s == st1.batch_span_s == st2.batch_span_s
+    assert st0.n_probes == st1.n_probes
+    assert st0.n_distinct_fetches == st1.n_distinct_fetches
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_root_span_matches_stats(built_pag, small_ds, engine):
+    """Tracer root spans ARE the stats: the batch root's duration equals
+    ``batch_span_s`` and each query root equals its latency."""
+    store = _mk_store(built_pag, small_ds)
+    tr = Tracer()
+    with observe(tracer=tr):
+        _, _, st = _search(built_pag, small_ds, store, engine=engine)
+    (root,) = tr.roots("batch")
+    assert root.dur_s == pytest.approx(st.batch_span_s, abs=1e-12)
+    qroots = tr.roots("query")
+    assert len(qroots) == len(st.latencies_s)
+    for s, lat in zip(qroots, st.latencies_s):
+        assert s.dur_s == pytest.approx(lat, abs=1e-12)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_child_spans_contained_in_parent(built_pag, small_ds, engine):
+    store = _mk_store(built_pag, small_ds)
+    tr = Tracer()
+    with observe(tracer=tr):
+        _search(built_pag, small_ds, store, engine=engine)
+    for root in tr.roots("batch") + tr.roots("query"):
+        kids = [s for s in tr.spans
+                if s.track == root.track and s is not root]
+        assert kids, f"no children under {root.track}"
+        for s in kids:
+            assert s.t0_s >= root.t0_s - 1e-12
+            assert s.t1_s <= root.t1_s + 1e-9
+        # the compute-thread slices ("X") tile the root: sum <= parent
+        tiled = sum(s.dur_s for s in kids if s.ph == "X")
+        assert tiled <= root.dur_s + 1e-9
+
+
+def test_engines_trace_same_totals(built_pag, small_ds):
+    """Both engines, same seed: per-query latencies differ (different
+    I/O schedules) but each engine's root span equals its own stats —
+    and results agree bit-for-bit across engines."""
+    outs = {}
+    for engine in ENGINES:
+        store = _mk_store(built_pag, small_ds)
+        tr = Tracer()
+        with observe(tracer=tr):
+            ids, d2, st = _search(built_pag, small_ds, store,
+                                  engine=engine)
+        (root,) = tr.roots("batch")
+        assert root.dur_s == pytest.approx(st.batch_span_s, abs=1e-12)
+        outs[engine] = ids
+    np.testing.assert_array_equal(outs["batched"], outs["per_query"])
+
+
+# ------------------------------------------------------------------- trace
+
+def test_trace_json_is_perfetto_loadable(built_pag, small_ds, tmp_path):
+    store = _mk_store(built_pag, small_ds)
+    tr = Tracer()
+    with observe(tracer=tr):
+        _search(built_pag, small_ds, store)
+    path = tr.save(str(tmp_path / "trace.json"))
+    doc = json.loads(open(path).read())
+    evs = doc["traceEvents"]
+    assert evs, "empty trace"
+    phases = {e["ph"] for e in evs}
+    assert "X" in phases and "M" in phases
+    for e in evs:
+        assert {"ph", "pid", "name"} <= set(e)
+        if e["ph"] == "X":
+            assert e["dur"] >= 0 and e["ts"] >= 0
+    # async b/e pairs balance per id
+    b = [e["id"] for e in evs if e["ph"] == "b"]
+    e_ = [e["id"] for e in evs if e["ph"] == "e"]
+    assert sorted(b) == sorted(e_)
+    # the two clock domains are separate perfetto processes
+    names = {e["args"]["name"] for e in evs
+             if e["ph"] == "M" and e["name"] == "process_name"}
+    assert names == {"event-clock", "host-wall"}
+
+
+def test_pq_trace_has_stage_spans(built_pag, small_ds):
+    tr = Tracer()
+    with observe(tracer=tr):
+        ids0, _, st0 = _search(built_pag, small_ds,
+                               _mk_store(built_pag, small_ds,
+                                         compression="pq"),
+                               compression="pq", rerank_k=32)
+    stages = {s.name for s in tr.spans if s.cat == "stage"}
+    assert {"fetch_wave", "adc_scan", "refine_wave",
+            "refine_scan"} <= stages
+    # and the compressed plane is also identity-safe under tracing
+    # (fresh store: the latency-jitter RNG advances per call)
+    ids1, _, st1 = _search(built_pag, small_ds,
+                           _mk_store(built_pag, small_ds,
+                                     compression="pq"),
+                           compression="pq", rerank_k=32)
+    np.testing.assert_array_equal(ids0, ids1)
+    assert st0.latencies_s == st1.latencies_s
+
+
+def test_timeline_breakdown_renders(built_pag, small_ds):
+    store = _mk_store(built_pag, small_ds)
+    tr = Tracer()
+    with observe(tracer=tr):
+        _search(built_pag, small_ds, store)
+    text = timeline_breakdown(tr)
+    assert "traversal" in text and "fetch stall" in text
+    assert "%" in text
+    assert timeline_breakdown(Tracer()) == "(no batch spans recorded)"
+
+
+def test_tracer_caps_drop_not_crash(built_pag, small_ds):
+    tr = Tracer(max_tracks=2, max_spans=50)
+    with observe(tracer=tr):
+        store = _mk_store(built_pag, small_ds)
+        _search(built_pag, small_ds, store)
+    assert len(tr.spans) <= 50
+    assert tr.n_dropped > 0
+    tr.save("/dev/null")  # still exports
+
+
+def test_noop_singletons_are_default():
+    assert get_tracer() is NOOP_TRACER
+    assert get_metrics() is NOOP_METRICS
+    with observe(tracer=Tracer(), metrics=MetricsRegistry()):
+        assert get_tracer().enabled and get_metrics().enabled
+    assert get_tracer() is NOOP_TRACER
+    assert get_metrics() is NOOP_METRICS
+
+
+# ----------------------------------------------------------------- metrics
+
+def test_metrics_snapshot(built_pag, small_ds):
+    store = _mk_store(built_pag, small_ds)
+    mx = MetricsRegistry()
+    with observe(metrics=mx):
+        _, _, st = _search(built_pag, small_ds, store)
+    snap = mx.snapshot()
+    assert snap["search.batches"] == 1.0
+    assert snap["search.queries"] == 16.0
+    assert snap["storage.gets"] >= st.n_distinct_fetches
+    assert snap["search.latency_s.count"] == 16.0
+    assert snap["search.latency_s.mean"] == pytest.approx(
+        float(np.mean(st.latencies_s)))
+    # histogram cumulative buckets are monotone in the bound
+    les = sorted((float(k.rsplit("_", 1)[1]), v)
+                 for k, v in snap.items()
+                 if k.startswith("search.latency_s.le_"))
+    counts = [v for _, v in les]
+    assert counts == sorted(counts)
+    assert counts[-1] <= snap["search.latency_s.count"]
+    mx.reset()
+    assert mx.snapshot() == {}
+
+
+def test_histogram_quantiles_and_bounds():
+    from repro.obs.metrics import Histogram
+    h = Histogram(bounds=COUNT_BUCKETS)
+    for v in (0, 1, 1, 3, 300):
+        h.observe(v)
+    assert h.count == 5 and h.max == 300
+    assert h.quantile(0.5) == 1.0
+    assert h.quantile(1.0) == 300  # overflow bucket reports max
+    assert Histogram().quantile(0.9) == 0.0
+
+
+def test_breaker_transition_metrics():
+    from repro.storage.resilience import CircuitBreaker
+    mx = MetricsRegistry()
+    with observe(metrics=mx):
+        br = CircuitBreaker(fail_threshold=2, cooldown_requests=1)
+        br.record_failure()
+        br.record_failure()          # -> open
+        assert not br.allow()        # cooldown tick
+        assert br.allow()            # -> half_open probe
+        br.record_success()          # -> closed
+    snap = mx.snapshot()
+    assert snap["breaker.to_open"] == 1.0
+    assert snap["breaker.to_half_open"] == 1.0
+    assert snap["breaker.to_closed"] == 1.0
+
+
+# -------------------------------------------------------------- satellites
+
+def test_cache_hit_rate_zero_lookups_and_reset():
+    from repro.storage.cache import PartitionCache
+    c = PartitionCache(1 << 20)
+    assert c.hit_rate == 0.0                    # no NaN on zero lookups
+    c.put("a", np.zeros(8, np.float32))
+    assert c.get("a") is not None and c.get("b") is None
+    assert c.hit_rate == pytest.approx(0.5)
+    c.reset_stats()
+    assert c.hits == c.misses == 0 and c.hit_rate == 0.0
+    assert c.get("a") is not None               # objects survive reset
+    assert c.hit_rate == 1.0
+
+
+def test_degraded_info_merge():
+    a = DegradedInfo(n_probes_wanted=4, n_probes_lost=1, retries=2,
+                     failovers=1, timeouts=1, corruptions=0,
+                     breaker_skips=3, breakers_open=1)
+    b = DegradedInfo(n_probes_wanted=2, n_probes_lost=0, retries=1,
+                     failovers=0, timeouts=0, corruptions=2,
+                     breaker_skips=0, breakers_open=2)
+    m = DegradedInfo.merge([a, b])
+    assert (m.n_probes_wanted, m.n_probes_lost) == (6, 1)
+    assert (m.retries, m.failovers, m.timeouts) == (3, 1, 1)
+    assert (m.corruptions, m.breaker_skips) == (2, 3)
+    assert m.breakers_open == 2                 # max, not sum
+    assert DegradedInfo.merge([]).retries == 0
+
+
+def test_frontend_queue_wait_and_spans(built_pag, small_ds):
+    from repro.core.distributed import ShardedServing
+    from repro.serving.engine import AnnsFrontend
+    store = _mk_store(built_pag, small_ds)
+    srv = ShardedServing(pag=built_pag, store=store, n_shards=4,
+                         dim=small_ds.d)
+    cfg = SearchConfig(L=32, k=10, n_probe_max=16)
+    tr, mx = Tracer(), MetricsRegistry()
+    with observe(tracer=tr, metrics=mx):
+        fe = AnnsFrontend(srv, cfg, max_batch=8)
+        tickets = [fe.submit(q) for q in small_ds.queries[:6]]
+        fe.flush()
+    for t in tickets:
+        assert t in fe.results
+        assert fe.queue_wait_s[t] >= 0.0
+    flushes = [s for s in tr.spans if s.cat == "flush"]
+    assert len(flushes) == 1
+    assert flushes[0].dur_s == pytest.approx(
+        fe.last_stats.batch_span_s)
+    assert len([s for s in tr.spans if s.cat == "ticket"]) == 6
+    snap = mx.snapshot()
+    assert snap["frontend.flushes"] == 1.0
+    assert snap["frontend.batch_size.count"] == 1.0
+    assert snap["frontend.queue_wait_s.count"] == 6.0
+    summary = fe.degraded_summary()
+    assert summary is None or isinstance(summary, DegradedInfo)
+
+
+def test_bench_json_roundtrip(tmp_path):
+    from benchmarks.common import (
+        BENCH_SCHEMA_VERSION,
+        collect_rows,
+        emit,
+        emit_bench_json,
+    )
+    with collect_rows() as rows:
+        emit("m/a", 12.5, "recall=0.9;qps=100;tag=fast;flagged")
+    path = emit_bench_json("unit", rows, out_dir=str(tmp_path))
+    doc = json.loads(open(path).read())
+    assert doc["schema_version"] == BENCH_SCHEMA_VERSION
+    assert doc["mode"] == "unit"
+    (row,) = doc["rows"]
+    assert row["name"] == "m/a" and row["us_per_call"] == 12.5
+    assert row["derived"] == {"recall": 0.9, "qps": 100.0,
+                              "tag": "fast", "flagged": True}
+    # emit() outside a collector must not leak into old lists
+    emit("m/b", 1.0, "x=1")
+    assert len(rows) == 1
