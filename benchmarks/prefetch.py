@@ -1,0 +1,105 @@
+"""Prefetch-ahead pipelining: fetch-stall share with prefetch off vs on.
+
+The micro-batch pipeline (serving.engine.AnnsFrontend + dataplane
+.prefetch) overlaps chunk N+1's probe wave with chunk N's refine/scan
+tail on the event clock. This mode streams one query set through the
+front-end twice — prefetch off, then on — over the DFS storage profile
+with the compressed (pq) probe wave, and reports the aggregate
+fetch-stall share of the batch spans (obs.report.fetch_stall_share).
+
+Acceptance (enforced — the run fails otherwise):
+* identical result ids (and so identical recall@10) off vs on;
+* strictly lower stall share with prefetch on;
+* the ON trace shows the overlapped ``prefetch_wave`` async slice
+  starting inside a prior batch's span.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import N_SHARDS, BenchContext, emit
+from repro.core.distributed import ShardedServing
+from repro.core.search import SearchConfig
+from repro.data.vectors import recall_at_k
+from repro.obs import get_tracer, observe
+from repro.obs.report import fetch_stall_share
+from repro.obs.trace import Tracer
+from repro.serving.engine import AnnsFrontend
+
+
+def _run_stream(ds, pag, store, cfg, queries, chunk, prefetch):
+    """One full stream through the front-end under a private tracer
+    (auto_flush off: buffer everything, then flush chunk by chunk so
+    chunk N can issue chunk N+1's wave mid-batch)."""
+    tracer = Tracer()
+    serving = ShardedServing(pag, store, n_shards=N_SHARDS, dim=ds.d)
+    fe = AnnsFrontend(serving, cfg, max_batch=chunk,
+                      prefetch=prefetch, auto_flush=False)
+    with observe(tracer=tracer):
+        for q in queries:
+            fe.submit(q)
+        fe.flush()
+    ids = np.stack([fe.results[t][0] for t in range(len(queries))])
+    return fe, tracer, ids
+
+
+def main(ctx: BenchContext):
+    ds = ctx.dataset("clustered")
+    pag, _ = ctx.pag("clustered", p=0.2, lam=3.0, redundancy=4)
+    k = 10
+    cfg = SearchConfig(L=64, k=k, n_probe_max=32, mode="async",
+                       compression="pq")
+    n_q = min(ctx.n_queries, 48 if ctx.smoke else 100)
+    chunk = 12 if ctx.smoke else 25
+    queries = ds.queries[:n_q]
+    gt = ds.gt_ids[:n_q]
+
+    print(f"\n== prefetch-ahead (dfs/pq, {n_q}q in chunks of {chunk}) ==")
+    out = {}
+    for label, pf in (("off", False), ("on", True)):
+        # fresh store per pass: both passes see the same write layout
+        # and an identically-seeded latency stream
+        store = ctx.pag_store("clustered", "dfs", pag, seed=1,
+                              compression="pq")
+        fe, tracer, ids = _run_stream(ds, pag, store, cfg, queries,
+                                      chunk, pf)
+        stall = fetch_stall_share(tracer)
+        rec = recall_at_k(ids, gt, k)
+        span = fe._clock_s           # event-clock makespan of the stream
+        qps = n_q / max(span, 1e-12)
+        out[label] = (stall, rec, ids, tracer)
+        print(f"  prefetch={label:<3s} stall={100 * stall:5.1f}% "
+              f"recall@{k}={rec:.3f} stream_qps={qps:8.0f} "
+              f"pf_hits={fe.n_prefetch_hits}")
+        emit(f"prefetch/{label}", 1e6 * span / n_q,
+             f"stall_share={stall:.4f};recall={rec:.3f};"
+             f"stream_qps={qps:.0f};prefetch_hits={fe.n_prefetch_hits}")
+
+    stall_off, rec_off, ids_off, _ = out["off"]
+    stall_on, rec_on, ids_on, tr_on = out["on"]
+    waves = [s for s in tr_on.spans
+             if s.ph == "b" and s.name == "prefetch_wave"]
+    # the overlapped wave must start INSIDE a prior batch's span
+    overlapped = any(r.t0_s <= s.t0_s < r.t1_s
+                     for s in waves for r in tr_on.roots("batch"))
+    identical = bool(np.array_equal(ids_off, ids_on))
+    ok = stall_on < stall_off and identical and overlapped
+    print(f"  >> stall {100 * stall_off:.1f}% -> {100 * stall_on:.1f}%"
+          f"  identical_results={identical}"
+          f"  overlapped_waves={len(waves)}")
+    emit("prefetch/acceptance", 0.0,
+         f"ok={ok};stall_off={stall_off:.4f};stall_on={stall_on:.4f};"
+         f"recall={rec_on:.3f};identical_results={identical};"
+         f"prefetch_waves={len(waves)}")
+    # each pass measures under its own tracer; replay the ON stream's
+    # spans into the ambient one so ``benchmarks.run --trace`` writes a
+    # trace_prefetch.json showing the overlapped prefetch_wave slices
+    amb = get_tracer()
+    if amb.enabled:
+        for s in tr_on.spans:
+            amb._add(s)
+    if not ok:
+        raise SystemExit(
+            f"prefetch acceptance failed: stall_off={stall_off:.4f} "
+            f"stall_on={stall_on:.4f} identical={identical} "
+            f"overlapped={overlapped}")

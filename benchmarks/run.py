@@ -25,6 +25,7 @@ MODES = {
     "radius_grid": "benchmarks.radius_grid:main",
     "drs_tail": "benchmarks.drs_tail:main",
     "cache_effect": "benchmarks.cache_effect:main",
+    "prefetch": "benchmarks.prefetch:main",
     "chaos": "benchmarks.chaos:main",
     "kernels": "benchmarks.kernels_micro:main",
     "lm": "benchmarks.lm_step:main",

@@ -11,4 +11,4 @@ if [[ "${FULL_CHAOS:-0}" == "1" ]]; then
     MARKS="not slow or chaos"
 fi
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-    python -m pytest -q -m "$MARKS" "$@"
+    python -m pytest -q -m "$MARKS" --durations=15 "$@"

@@ -85,7 +85,10 @@ class ShardedServing:
         return moved
 
     def search(self, queries: np.ndarray, cfg: SearchConfig,
-               compute: Optional[ComputeModel] = None):
+               compute: Optional[ComputeModel] = None, **kw):
+        """``**kw`` passes the micro-batch pipeline arguments through to
+        ``search_pag`` (``prefetched`` / ``prefetch_probes`` /
+        ``trace_t0_s`` — see ``serving.engine.AnnsFrontend``)."""
         if self.replicas > 1 and cfg.replicas == 1:
             cfg = dataclasses.replace(cfg, replicas=self.replicas)
         if self.resilient is not None and cfg.resilience is None:
@@ -93,7 +96,7 @@ class ShardedServing:
         return search_pag(self.pag, self.dim, queries, self.store, cfg,
                           compute=compute, prefix=self.prefix,
                           n_shards=self.n_shards,
-                          dead_shard_fallback=True)
+                          dead_shard_fallback=True, **kw)
 
 
 # --------------------------------------------------------------------------

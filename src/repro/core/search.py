@@ -2,30 +2,36 @@
 Partition Probe early stop (§V-A) + asynchronous partition fetch (Alg 5).
 
 Execution = real computation (exact recall); time = storage-simulator
-event clock (see DESIGN.md §8). The traversal is the batched jitted
-Algorithm 1; the partition scan is one masked Pallas ``l2_topk`` launch
-over the pooled candidates of the whole batch.
+event clock (see DESIGN.md §8). This module is the *orchestrator*: the
+data plane itself is the staged pipeline in ``repro.dataplane`` —
+
+    plan   (``FetchPlan`` over a ``KeySpace``: probe orders -> keys)
+    waves  (``WaveScheduler``: every storage wave, every clock)
+    scan   (``ScanStage``: the masked Pallas l2_topk / pq_adc launches)
+
+``search_pag`` builds the plans and sequences the stages; it performs
+no storage GETs of its own.
 
 Two data-plane engines (``SearchConfig.engine``):
 
 * ``"batched"`` (default) — the batch-coalesced plane. The graph phase
   runs for the whole query batch, then partition probes are coalesced
-  across queries: each distinct partition is fetched ONCE per batch via
-  ``ObjectStore.get_many`` (one concurrent RPC wave, hedging preserved),
-  filled into the optional cache, and scanned for all probing queries in
-  a single vectorized distance/top-k pass. Per-query latency accounting
-  survives: each query's ``QueryTimeline`` carries its own traversal
-  compute and its own probes, with a shared fetch's latency charged to
-  every prober. Batch throughput (``SearchStats.batch_qps``) comes from
-  a batch-level event clock: fetches issue as their first prober's
-  traversal retires, coalesced scans amortize the per-partition
-  dispatch overhead across probers.
+  across queries: each distinct partition is fetched ONCE per batch
+  (``WaveScheduler.run_coalesced`` — one concurrent RPC wave, hedging
+  preserved), filled into the optional cache, and scanned for all
+  probing queries in a single vectorized distance/top-k pass. Per-query
+  latency accounting survives: each query's ``QueryTimeline`` carries
+  its own traversal compute and its own probes, with a shared fetch's
+  latency charged to every prober. Batch throughput
+  (``SearchStats.batch_qps``) comes from the scheduler's batch-level
+  event clock: fetches issue as their first prober's traversal retires,
+  coalesced scans amortize the per-partition dispatch overhead.
 
-* ``"per_query"`` — the seed data plane kept as reference/baseline: a
-  python loop issuing blocking (or hedged) per-partition GETs per
-  query. Same probes, same candidate pools, same scan arithmetic ⇒
-  bit-identical results to the batched engine (tested), only the
-  simulated I/O schedule differs.
+* ``"per_query"`` — the seed data plane kept as reference/baseline
+  (``WaveScheduler.run_per_query``): a python loop issuing blocking (or
+  hedged) per-partition GETs per query. Same probes, same candidate
+  pools, same scan arithmetic ⇒ bit-identical results to the batched
+  engine (tested), only the simulated I/O schedule differs.
 
 ``SearchConfig`` knobs:
 
@@ -49,23 +55,26 @@ Two data-plane engines (``SearchConfig.engine``):
   turns each partition fetch into a retry/backoff + timeout + replica
   failover + circuit-breaker chain whose full event-clock cost is
   charged to the query timeline. Per-query damage is reported in
-  ``SearchStats.degraded`` (``DegradedInfo``: partitions lost,
-  retries, failovers, timeouts, corruptions, breaker skips).
+  ``SearchStats.degraded``.
 * ``max_inflight`` — bounds the concurrency of the batched engine's
   RPC wave (sub-waves on the event clock; queueing charged).
 * ``compression`` — ``"pq"`` switches the probe wave to the v2
   compressed payloads: the wave fetches only the per-partition PQ code
-  objects (``uint8 [cnt, M]`` — 8-16x fewer bytes than the float
-  residuals), one masked Pallas ADC launch
-  (``kernels/pq_adc.pq_adc_masked``) scores every query's pooled
-  candidates, and an exact refine wave fetches the full float residual
-  objects only for the partitions holding each query's ADC-top
-  ``rerank_k`` candidates. A ``PartitionCache`` then caches the
-  *compressed* objects (same byte budget, ~8-16x more partitions). A
-  lost code object degrades exactly like a lost partition; a lost
-  refine object drops that partition from the exact pool (both counted
-  in ``DegradedInfo.n_probes_lost``); corrupt payloads are never
-  admitted to the cache.
+  objects, one masked Pallas ADC launch scores every query's pooled
+  candidates (``ScanStage.adc_select``), and an exact refine wave
+  fetches the full float residual objects only for the partitions
+  holding each query's ADC-top ``rerank_k`` candidates. A
+  ``PartitionCache`` then caches the *compressed* objects. A lost code
+  object degrades exactly like a lost partition; corrupt payloads are
+  never admitted to the cache.
+
+Prefetch-ahead (cross-batch pipelining, see ``dataplane.prefetch``):
+``prefetch_probes`` hands ``search_pag`` the predicted probe orders of
+the NEXT micro-batch; the batched engine issues that wave's payload
+objects at the event-clock point where this batch enters its
+refine/scan stages and returns the in-flight wave as
+``SearchStats.prefetch``. The next call consumes it via ``prefetched``
+(key -> (object, residual latency)) and pays only the residual.
 
 v2 payload format (``write_partitions(compression="pq")``), per
 partition ``pid`` with ``S`` shards / ``R`` replicas:
@@ -85,7 +94,6 @@ object's id column bit-casts ``int32`` ids into the ``float32`` column
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Dict, Iterable, List, Optional, Tuple
 
 import jax.numpy as jnp
@@ -93,16 +101,21 @@ import numpy as np
 
 from repro.core.graph_search import greedy_search
 from repro.core.pag import PAG
-from repro.kernels import ops
+from repro.dataplane.plan import (
+    PAYLOAD_CODE,
+    PAYLOAD_FLOAT,
+    FetchPlan,
+    KeySpace,
+    app_probe_order as _app_probe_order_impl,
+    probe_orders,
+)
+from repro.dataplane.prefetch import PrefetchHandle
+from repro.dataplane.scan import ID_SENTINEL, INF, ScanStage, dedup_first
+from repro.dataplane.wave import WaveScheduler
 from repro.obs import get_metrics, get_tracer
 from repro.obs.metrics import COUNT_BUCKETS
-from repro.storage.resilience import (
-    FetchOutcome,
-    ResiliencePolicy,
-    ResilientStore,
-    codebook_keys,
-    replica_keys,
-)
+from repro.storage.resilience import FetchOutcome, codebook_keys, \
+    replica_keys
 from repro.storage.simulator import (
     ComputeModel,
     ObjectStore,
@@ -110,8 +123,15 @@ from repro.storage.simulator import (
     StorageConfig,
 )
 
-INF = np.float32(3.4e38)
-ID_SENTINEL = 2 ** 62   # invalid-id marker used during dedup
+# moved into the dataplane package; re-bound here for callers/tests that
+# pin the historical import site (repro.core.search)
+_dedup_first = dedup_first
+_app_probe_order = _app_probe_order_impl
+
+__all__ = [
+    "ID_SENTINEL", "INF", "DegradedInfo", "SearchConfig", "SearchStats",
+    "search_pag", "write_partitions",
+]
 
 
 def _pack_ids(ids: np.ndarray) -> np.ndarray:
@@ -255,6 +275,14 @@ class SearchStats:
     # cache's lifetime; None when the search ran cache-less)
     cache_hit_rate: Optional[float] = None
     cache_bytes_evicted: int = 0
+    # prefetch-ahead pipelining (dataplane.prefetch): probes served from
+    # the previous micro-batch's prefetch wave, and the wave this batch
+    # issued for the NEXT one (None unless ``prefetch_probes`` was given)
+    n_prefetch_hits: int = 0
+    prefetch: Optional[PrefetchHandle] = None
+    # tracer group of this batch's span tree ("" when not tracing) —
+    # lets the frontend attach flow arrows to the per-query tracks
+    trace_group: str = ""
 
     def n_degraded_queries(self) -> int:
         return sum(1 for d in self.degraded if d.degraded)
@@ -286,404 +314,25 @@ class SearchStats:
         return float(np.quantile(np.asarray(self.latencies_s), 0.99))
 
 
-def _app_probe_order(path: np.ndarray, path_d2: np.ndarray, hops: int,
-                     radius: np.ndarray, rho: float, n_probe_max: int
-                     ) -> List[int]:
-    """APP (§V-A): walk the expansion order; keep partitions whose sphere
-    can overlap the current best ball; stop when the current node's
-    distance exceeds rho * (d_min + r_best + r_cur) (true distances)."""
-    probes: List[int] = []
-    d_min = np.inf
-    r_best = 0.0
-    for t in range(hops):
-        node = int(path[t])
-        d_cur = float(np.sqrt(max(path_d2[t], 0.0)))
-        r_cur = float(radius[node])
-        if d_cur > rho * (d_min + r_best + r_cur) and probes:
-            break  # early stop (paper Fig 7 rule, scaled by rho)
-        if d_cur < d_min:
-            d_min, r_best = d_cur, r_cur
-        probes.append(node)
-        if len(probes) >= n_probe_max:
-            break
-    return probes
-
-
-def _dedup_first(ids: np.ndarray) -> np.ndarray:
-    """Keep-mask of the first occurrence of each id (redundant copies,
-    Def 5). Invalid ids (< 0) map to the ID_SENTINEL and are dropped."""
-    ids = np.where(ids >= 0, ids, ID_SENTINEL)
-    _, first = np.unique(ids, return_index=True)
-    mask = np.zeros(len(ids), bool)
-    mask[first] = True
-    mask &= ids < ID_SENTINEL
-    return mask
-
-
-def _scan_pools(queries: np.ndarray, pool_ids: List[np.ndarray],
-                pool_vecs: List[np.ndarray], k: int, scan_block: int
-                ) -> Tuple[np.ndarray, np.ndarray]:
-    """One vectorized distance/top-k pass over every query's candidate
-    pool (ragged rows padded with id -1), routed through the Pallas
-    masked l2_topk kernel. Returns (ids [Q, k] int64, d2 [Q, k])."""
-    q_count, d = queries.shape
-    c_max = max((len(p) for p in pool_ids), default=0)
-    if c_max == 0:
-        return (np.full((q_count, k), -1, np.int64),
-                np.full((q_count, k), INF, np.float32))
-    ids_pad = np.full((q_count, c_max), -1, np.int32)
-    vecs_pad = np.zeros((q_count, c_max, d), np.float32)
-    for qi in range(q_count):
-        n = len(pool_ids[qi])
-        if n:
-            ids_pad[qi, :n] = pool_ids[qi]
-            vecs_pad[qi, :n] = pool_vecs[qi]
-    tracer = get_tracer()
-    t0 = time.perf_counter() if tracer.enabled else 0.0
-    d2, ids = ops.l2_topk_masked(
-        jnp.asarray(queries, jnp.float32), jnp.asarray(vecs_pad),
-        jnp.asarray(ids_pad), k=k, block_c=scan_block)
-    out = np.asarray(ids).astype(np.int64), np.asarray(d2)
-    if tracer.enabled:      # np.asarray forced the async dispatch above
-        dt = time.perf_counter() - t0
-        tracer.wall_span("pallas_launch l2_topk", dt,
-                         {"queries": q_count, "c_max": c_max, "k": k})
-        get_metrics().observe("kernels.launch_s", dt)
-    return out
-
-
-def _resolve_resilient(store: ObjectStore, cfg: SearchConfig
-                       ) -> Optional[ResilientStore]:
-    """cfg.resilience: None | ResiliencePolicy (fresh wrapper per call)
-    | a long-lived ResilientStore (must wrap the same store)."""
-    r = cfg.resilience
-    if r is None:
-        return None
-    if isinstance(r, ResilientStore):
-        if r.store is not store:
-            raise ValueError("cfg.resilience wraps a different store")
-        return r
-    if isinstance(r, ResiliencePolicy):
-        return ResilientStore(store, r)
-    raise TypeError(f"cfg.resilience: {type(r)!r}")
-
-
-def _fetch_batched(probes_all: List[List[int]], rkeys_of, store: ObjectStore,
-                   resilient: Optional[ResilientStore], cfg: SearchConfig,
-                   dead_shard_fallback: bool, cache: Optional[object]
-                   ) -> Tuple[Dict[int, np.ndarray], Dict[int, float],
-                              Dict[int, List[int]], List[int], int,
-                              Dict[int, FetchOutcome]]:
-    """Coalesce partition probes across the batch: one cache pass + one
-    concurrent wave over the distinct partitions (get_many, or replicated
-    fetch chains when resilience is on). ``cache`` is consulted/filled
-    when given (the compressed plane passes None for the exact refine
-    wave: only compressed objects are cached). Returns (objs,
-    latency-per-pid, probers-per-pid, first-probe order,
-    n_store_fetches, fetch-outcome-per-pid)."""
-    order: List[int] = []
-    probers: Dict[int, List[int]] = {}
-    for qi, probes in enumerate(probes_all):
-        for pid in probes:
-            if pid not in probers:
-                probers[pid] = []
-                order.append(pid)
-            probers[pid].append(qi)
-
-    def key_of(pid: int) -> str:
-        return rkeys_of(pid)[0]
-
-    objs: Dict[int, np.ndarray] = {}
-    lat: Dict[int, float] = {}
-    outcomes: Dict[int, FetchOutcome] = {}
-    to_fetch: List[int] = []
-    for pid in order:
-        cached = cache.get(key_of(pid)) if cache is not None else None
-        if cached is not None:
-            objs[pid], lat[pid] = cached, 0.0  # local-memory hit
-        else:
-            to_fetch.append(pid)
-
-    if resilient is not None:
-        waves = resilient.get_many_replicated(
-            {pid: rkeys_of(pid) for pid in to_fetch},
-            hedge_after_s=cfg.hedge_after_s,
-            max_inflight=cfg.max_inflight)
-        n_store = 0
-        for pid in to_fetch:
-            oc = waves[pid]
-            outcomes[pid] = oc
-            if oc.ok:
-                objs[pid], lat[pid] = oc.value, oc.elapsed_s
-                n_store += 1
-            elif not dead_shard_fallback:
-                raise KeyError(f"partition lost: {key_of(pid)}")
-    else:
-        fetched = store.get_many(
-            [key_of(pid) for pid in to_fetch],
-            hedge_after_s=cfg.hedge_after_s,
-            on_missing="skip" if dead_shard_fallback else "raise",
-            max_inflight=cfg.max_inflight)
-        for pid in to_fetch:
-            got = fetched.get(key_of(pid))
-            if got is None:
-                outcomes[pid] = FetchOutcome()  # dead shard: skipped
-                continue
-            objs[pid], lat[pid] = got
-            outcomes[pid] = FetchOutcome(
-                value=got[0], elapsed_s=got[1], ok=True, replica_used=0)
-        n_store = len(fetched)
-    if cache is not None:
-        # corrupted payloads must never be admitted to the cache: the
-        # resilient chain already verified survivors; the bare plane
-        # checks the put-time checksum here at admission
-        cache.put_many({
-            key_of(pid): objs[pid] for pid in to_fetch
-            if pid in objs and (resilient is not None
-                                or store.verify(key_of(pid), objs[pid]))})
-        for pid in order:
-            if pid in objs:
-                cache.account_shared(key_of(pid),
-                                     len(probers[pid]) - 1)
-    return objs, lat, probers, order, n_store, outcomes
-
-
-def _fetch_per_query(probes_all: List[List[int]], rkeys_of,
-                     store: ObjectStore,
-                     resilient: Optional[ResilientStore],
-                     cfg: SearchConfig, dead_shard_fallback: bool,
-                     cache: Optional[object],
-                     timelines: List[QueryTimeline],
-                     degraded: List[DegradedInfo], scan_cost,
-                     kind: str = "scan"
-                     ) -> Tuple[Dict[int, np.ndarray], int]:
-    """The seed data plane, one wave: blocking per-partition GETs, query
-    by query (no cross-query coalescing — a partition probed by two
-    queries is fetched twice unless a cache serves the second). Charges
-    each query's timeline (``scan_cost(obj) -> seconds`` per scan) and
-    fills per-query ``DegradedInfo``. ``kind`` labels the wave's spans
-    on the trace ("adc" probe wave vs "exact" refine wave). Returns
-    (objs, n_store_fetches)."""
-    objs: Dict[int, np.ndarray] = {}
-    n_store = 0
-    for qi, probes in enumerate(probes_all):
-        for pid in probes:
-            key = rkeys_of(pid)[0]
-            oc = None
-            cached = cache.get(key) if cache is not None else None
-            if cached is not None:
-                obj, io_lat = cached, 0.0  # local-memory hit
-                label = f"hit p{pid}"
-            elif resilient is not None:
-                oc = resilient.get_replicated(
-                    rkeys_of(pid), hedge_after_s=cfg.hedge_after_s)
-                degraded[qi].add_outcome(oc)
-                if not oc.ok:
-                    degraded[qi].n_probes_lost += 1
-                    timelines[qi].issue_io(oc.elapsed_s, 0.0,
-                                           label=f"lost p{pid}",
-                                           detail=oc)
-                    if dead_shard_fallback:
-                        continue  # degraded: budget burned, no data
-                    raise KeyError(f"partition lost: {key}")
-                obj, io_lat = oc.value, oc.elapsed_s
-                label = f"{kind} p{pid}"
-                n_store += 1
-                if cache is not None:
-                    cache.put(key, obj)
-            else:
-                try:
-                    if cfg.hedge_after_s is not None:
-                        obj, io_lat = store.get_hedged(
-                            key, cfg.hedge_after_s)
-                    else:
-                        obj, io_lat = store.get(key)
-                except KeyError:
-                    degraded[qi].n_probes_lost += 1
-                    if dead_shard_fallback:
-                        continue  # degraded: skip dead partition
-                    raise
-                label = f"{kind} p{pid}"
-                n_store += 1
-                if cache is not None and store.verify(key, obj):
-                    cache.put(key, obj)  # no corrupt admission
-            objs[pid] = obj
-            timelines[qi].issue_io(io_lat, scan_cost(obj),
-                                   label=label, detail=oc)
-    return objs, n_store
-
-
-def _load_codebook(store: ObjectStore, resilient: Optional[ResilientStore],
-                   cfg: SearchConfig, prefix: str,
-                   dead_shard_fallback: bool):
-    """Fetch the per-index PQ codebook object — index metadata shared by
-    every query, fetched once per search call in BOTH engines and
-    admitted to the cache (steady-state serving pays for it once).
-    Returns (PQCodebook | None, latency_s, n_store_fetches, outcome)."""
-    from repro.baselines.pq import PQCodebook
-    keys = codebook_keys(prefix, cfg.replicas)
-    oc: Optional[FetchOutcome] = None
-    n_store = 0
-    cached = cfg.cache.get(keys[0]) if cfg.cache is not None else None
-    if cached is not None:
-        arr, lat = cached, 0.0  # local-memory hit
-    elif resilient is not None:
-        oc = resilient.get_replicated(keys,
-                                      hedge_after_s=cfg.hedge_after_s)
-        if not oc.ok:
-            if dead_shard_fallback:
-                return None, oc.elapsed_s, 0, oc
-            raise KeyError(f"pq codebook lost: {keys[0]}")
-        arr, lat, n_store = oc.value, oc.elapsed_s, 1
-        if cfg.cache is not None:
-            cfg.cache.put(keys[0], arr)
-    else:
-        try:
-            if cfg.hedge_after_s is not None:
-                arr, lat = store.get_hedged(keys[0], cfg.hedge_after_s)
-            else:
-                arr, lat = store.get(keys[0])
-        except KeyError:
-            if dead_shard_fallback:
-                return None, 0.0, 0, None
-            raise
-        n_store = 1
-        if cfg.cache is not None and store.verify(keys[0], arr):
-            cfg.cache.put(keys[0], arr)  # no corrupt admission
-    arr = np.asarray(arr)
-    m, _, d_sub = arr.shape
-    return PQCodebook(arr, m, m * d_sub), lat, n_store, oc
-
-
-def _adc_select(codebook, queries: np.ndarray,
-                probes_all: List[List[int]],
-                objs: Dict[int, np.ndarray], pag: PAG, rerank_k: int,
-                scan_block: int) -> List[List[int]]:
-    """The ADC stage of the compressed plane: pool every query's fetched
-    code objects (rows mapped to original ids via the in-memory
-    ``pag.plist``, deduped like the exact pool), score ALL pools in one
-    masked Pallas launch, and return, per query, the partitions holding
-    its ADC-top ``rerank_k`` candidates (ordered by ADC rank) — the
-    exact refine wave's fetch list. Redundant copies (Def 5) make the
-    partition choice a covering problem: a candidate counts as covered
-    by ANY already-selected partition holding one of its copies, so the
-    refine wave fetches the fewest partitions that cover the ADC top."""
-    from repro.baselines.pq import adc_lut_batch
-    q_count = len(probes_all)
-    cand_pids: List[np.ndarray] = []
-    cand_codes: List[np.ndarray] = []
-    cand_ids: List[np.ndarray] = []
-    id_pids: List[Dict[int, List[int]]] = []  # id -> probed pids with it
-    for qi in range(q_count):
-        ids_l, pids_l, codes_l = [], [], []
-        for pid in probes_all[qi]:
-            codes = objs.get(pid)
-            if codes is None:
-                continue
-            cnt = codes.shape[0]
-            ids_l.append(pag.plist[pid, :cnt].astype(np.int64))
-            pids_l.append(np.full(cnt, pid, np.int32))
-            codes_l.append(codes)
-        if ids_l:
-            ids_c = np.concatenate(ids_l)
-            pids_c = np.concatenate(pids_l)
-            keep = _dedup_first(ids_c)  # redundant copies score once
-            cand_pids.append(pids_c[keep])
-            cand_codes.append(np.concatenate(codes_l)[keep])
-            cand_ids.append(ids_c[keep])
-            by_id: Dict[int, List[int]] = {}
-            for i, cid in zip(pids_c, ids_c):
-                by_id.setdefault(int(cid), []).append(int(i))
-            id_pids.append(by_id)
-        else:
-            cand_pids.append(np.zeros(0, np.int32))
-            cand_codes.append(np.zeros((0, codebook.M), np.uint8))
-            cand_ids.append(np.zeros(0, np.int64))
-            id_pids.append({})
-
-    c_max = max((len(p) for p in cand_pids), default=0)
-    if c_max == 0:
-        return [[] for _ in range(q_count)]
-    m = codebook.M
-    codes_pad = np.zeros((q_count, c_max, m), np.uint8)
-    pos_pad = np.full((q_count, c_max), -1, np.int32)
-    for qi in range(q_count):
-        n = len(cand_pids[qi])
-        if n:
-            codes_pad[qi, :n] = cand_codes[qi]
-            pos_pad[qi, :n] = np.arange(n, dtype=np.int32)
-    luts = adc_lut_batch(codebook, np.asarray(queries, np.float32))
-    tracer = get_tracer()
-    t0 = time.perf_counter() if tracer.enabled else 0.0
-    _, pos = ops.pq_adc_masked(
-        jnp.asarray(luts), jnp.asarray(codes_pad), jnp.asarray(pos_pad),
-        k=rerank_k, block_c=scan_block)
-    pos = np.asarray(pos)
-    if tracer.enabled:      # np.asarray forced the async dispatch above
-        dt = time.perf_counter() - t0
-        tracer.wall_span("pallas_launch pq_adc", dt,
-                         {"queries": q_count, "c_max": c_max, "M": m,
-                          "rerank_k": rerank_k})
-        get_metrics().observe("kernels.launch_s", dt)
-
-    refine_all: List[List[int]] = []
-    for qi in range(q_count):
-        chosen: List[int] = []
-        chosen_set: set = set()
-        for p in pos[qi]:
-            if p < 0:
-                continue
-            copies = id_pids[qi].get(int(cand_ids[qi][p]))
-            if copies is None:  # defensive: scored row always has copies
-                copies = [int(cand_pids[qi][p])]
-            if chosen_set.intersection(copies):
-                continue  # a selected partition already holds a copy
-            pid = int(cand_pids[qi][p])
-            chosen.append(pid)
-            chosen_set.add(pid)
-        refine_all.append(chosen)
-    return refine_all
-
-
-def _charge_probers(order: List[int], probers: Dict[int, List[int]],
-                    objs: Dict[int, np.ndarray], lat: Dict[int, float],
-                    outcomes: Dict[int, FetchOutcome],
-                    timelines: List[QueryTimeline],
-                    degraded: List[DegradedInfo], scan_cost,
-                    kind: str = "scan"):
-    """Per-query accounting of one coalesced wave: every prober is
-    charged the shared fetch chain's cost (latency incl.
-    retries/failovers) and its own scan (``scan_cost(obj) -> s``); lost
-    partitions are reported. ``kind`` labels the wave's spans on the
-    trace; a partition with no fetch outcome was served by the cache
-    (``hit``)."""
-    for pid in order:
-        oc = outcomes.get(pid)
-        for qi in probers[pid]:
-            if oc is not None:
-                degraded[qi].add_outcome(oc)
-            if pid not in objs:
-                degraded[qi].n_probes_lost += 1
-        if pid not in objs:
-            if oc is not None and oc.elapsed_s > 0:
-                for qi in probers[pid]:  # failed chain burned budget
-                    timelines[qi].issue_io(oc.elapsed_s, 0.0,
-                                           label=f"lost p{pid}",
-                                           detail=oc)
-            continue
-        label = f"{kind} p{pid}" if oc is not None else f"hit p{pid}"
-        for qi in probers[pid]:
-            timelines[qi].issue_io(lat[pid], scan_cost(objs[pid]),
-                                   label=label, detail=oc)
-
-
 def search_pag(pag: PAG, x_dim: int, queries: np.ndarray,
                store: ObjectStore, cfg: SearchConfig,
                compute: Optional[ComputeModel] = None,
                prefix: str = "part", n_shards: int = 1,
-               dead_shard_fallback: bool = True
+               dead_shard_fallback: bool = True,
+               prefetched: Optional[Dict[str, Tuple[np.ndarray, float]]]
+               = None,
+               prefetch_probes: Optional[List[List[int]]] = None,
+               trace_t0_s: float = 0.0
                ) -> Tuple[np.ndarray, np.ndarray, SearchStats]:
-    """Returns (result ids [Q, k] original ids, sq-dists [Q, k], stats)."""
+    """Returns (result ids [Q, k] original ids, sq-dists [Q, k], stats).
+
+    ``prefetched`` / ``prefetch_probes`` / ``trace_t0_s`` serve the
+    micro-batch pipeline (``serving.engine.AnnsFrontend``): objects the
+    previous batch already fetched (key -> (object, residual latency)),
+    the predicted probe orders of the next batch (the batched engine
+    issues their wave mid-batch and returns it as ``stats.prefetch``),
+    and the absolute event-clock offset of this batch's span tree
+    (so frontend and batch tracks share one clock in the trace)."""
     compute = compute or ComputeModel()
     pg = pag.pg
     A_dev, nbrs_dev, n_nodes, entry = pg.device_arrays()
@@ -700,39 +349,33 @@ def search_pag(pag: PAG, x_dim: int, queries: np.ndarray,
     traversal_s = [compute.search_hop(int(hops[qi]) * R_edges, x_dim)
                    for qi in range(q_count)]
     # APP replay: probe order per query (nonempty partitions only)
-    probes_all = [
-        [pid for pid in _app_probe_order(path_all[qi], path_all_d2[qi],
-                                         int(hops[qi]), pag.radius,
-                                         cfg.rho, cfg.n_probe_max)
-         if int(pag.pcount[pid]) > 0]
-        for qi in range(q_count)
-    ]
-
-    def rkeys_of(pid: int) -> List[str]:
-        return replica_keys(prefix, pid, n_shards, cfg.replicas)
-
-    def ckeys_of(pid: int) -> List[str]:
-        return replica_keys(prefix, pid, n_shards, cfg.replicas,
-                            obj="pq")
+    probes_all = probe_orders(pag, path_all, path_all_d2, hops,
+                              cfg.rho, cfg.n_probe_max)
 
     if cfg.compression not in ("none", "pq"):
         raise ValueError(f"unknown compression: {cfg.compression!r}")
     pq = cfg.compression == "pq"
+    keyspace = KeySpace(prefix, n_shards, cfg.replicas)
 
     tracer = get_tracer()
     metrics = get_metrics()
     rec = tracer.enabled   # keep the per-event schedule for the spans
-    resilient = _resolve_resilient(store, cfg)
     timelines = [QueryTimeline(record=rec) for _ in range(q_count)]
     degraded = [DegradedInfo(n_probes_wanted=len(probes_all[qi]))
                 for qi in range(q_count)]
     for qi in range(q_count):
         timelines[qi].add_compute(traversal_s[qi])
 
-    codebook, cb_lat, cb_fetch = None, 0.0, 0
+    sched = WaveScheduler(store, cfg, timelines=timelines,
+                          degraded=degraded, compute=compute,
+                          dead_shard_fallback=dead_shard_fallback,
+                          record=rec, prefetched=prefetched)
+    scan = ScanStage(cfg.scan_block)
+
+    codebook, cb_lat = None, 0.0
     if pq:
-        codebook, cb_lat, cb_fetch, cb_oc = _load_codebook(
-            store, resilient, cfg, prefix, dead_shard_fallback)
+        codebook, cb_lat, cb_oc = sched.load_codebook(keyspace,
+                                                      cache=cfg.cache)
         if codebook is None:
             # the compressed plane is down for this batch: every probe
             # degrades like a lost partition (beam-only results)
@@ -748,102 +391,72 @@ def search_pag(pag: PAG, x_dim: int, queries: np.ndarray,
     # probe wave: code objects under "pq" compression, else residuals.
     # The ADC scan of a code object costs scan(cnt, M); exact scans
     # cost scan(cnt, d).
-    key_fn = ckeys_of if pq else rkeys_of
+    probe_payload = PAYLOAD_CODE if pq else PAYLOAD_FLOAT
     probe_cost = (lambda o: compute.scan(o.shape[0], o.shape[1])) if pq \
         else (lambda o: compute.scan(o.shape[0], x_dim))
     exact_cost = lambda o: compute.scan(o.shape[0], x_dim)  # noqa: E731
+    probe_kind = "adc" if pq else "scan"
 
     fobjs: Dict[int, np.ndarray] = {}
     refine_all: List[List[int]] = [[] for _ in range(q_count)]
-    probe_kind = "adc" if pq else "scan"
-    bt: Optional[QueryTimeline] = None
+    handle: Optional[PrefetchHandle] = None
+    batch_span: Optional[float] = None
 
     if cfg.engine == "batched":
-        objs, lat, probers, order, n_store, outcomes = _fetch_batched(
-            probes_all, key_fn, store, resilient, cfg,
-            dead_shard_fallback, cfg.cache)
-        _charge_probers(order, probers, objs, lat, outcomes, timelines,
-                        degraded, probe_cost, kind=probe_kind)
+        plan = FetchPlan.build(probes_all, keyspace, probe_payload)
+        wave = sched.run_coalesced(plan, cache=cfg.cache)
+        sched.charge_queries(wave, probe_cost, kind=probe_kind)
+        objs = wave.objs
         # batch event clock: a fetch issues when its FIRST prober's
         # traversal retires; one coalesced scan per distinct partition
-        bt = QueryTimeline(record=rec)
-        if cb_lat > 0:
-            bt.issue_io(cb_lat, 0.0, label="codebook")
-        first_prober = {pid: probers[pid][0] for pid in order}
-        for qi in range(q_count):
-            bt.add_compute(traversal_s[qi], label=f"traversal q{qi}")
-            for pid in probes_all[qi]:
-                if first_prober[pid] != qi:
-                    continue
-                if pid in objs:
-                    o = objs[pid]
-                    hit = outcomes.get(pid) is None  # cache-served
-                    bt.issue_io(lat[pid], compute.scan_batched(
-                        o.shape[0], o.shape[1] if pq else x_dim,
-                        len(probers[pid])),
-                        label=f"{'hit' if hit else probe_kind} p{pid}",
-                        detail=outcomes.get(pid))
-                else:
-                    oc = outcomes.get(pid)
-                    if oc is not None and oc.elapsed_s > 0:
-                        bt.issue_io(oc.elapsed_s, 0.0,  # burned budget
-                                    label=f"lost p{pid}", detail=oc)
-        n_distinct = n_store + cb_fetch
+        sched.charge_batch_codebook(cb_lat)
+        sched.charge_batch_probe(wave, traversal_s, x_dim, pq,
+                                 probe_kind)
         if pq:
             if codebook is not None and objs:
-                refine_all = _adc_select(codebook, queries, probes_all,
-                                         objs, pag, cfg.rerank_k,
-                                         cfg.scan_block)
+                refine_all = scan.adc_select(codebook, queries,
+                                             probes_all, objs, pag,
+                                             cfg.rerank_k)
             # stage boundary: the exact refine wave can only issue
             # after the ADC pass over the code objects has retired
-            for tl in timelines:
-                tl.barrier(cfg.mode)
-            bt.barrier(cfg.mode)
-            fobjs, flat, fprobers, forder, fn_store, foutcomes = \
-                _fetch_batched(refine_all, rkeys_of, store, resilient,
-                               cfg, dead_shard_fallback, None)
-            _charge_probers(forder, fprobers, fobjs, flat, foutcomes,
-                            timelines, degraded, exact_cost,
-                            kind="exact")
-            for pid in forder:
-                if pid in fobjs:
-                    bt.issue_io(flat[pid], compute.scan_batched(
-                        fobjs[pid].shape[0], x_dim,
-                        len(fprobers[pid])), label=f"exact p{pid}",
-                        detail=foutcomes.get(pid))
-                else:
-                    oc = foutcomes.get(pid)
-                    if oc is not None and oc.elapsed_s > 0:
-                        bt.issue_io(oc.elapsed_s, 0.0,  # burned budget
-                                    label=f"lost p{pid}", detail=oc)
-            n_distinct += fn_store
-        batch_span = bt.finish_async() if cfg.mode == "async" \
-            else bt.finish_sync()
+            sched.barrier(cfg.mode)
+            t_prefetch = sched.bt.compute_s  # refine stage starts here
+            fplan = FetchPlan.build(refine_all, keyspace, PAYLOAD_FLOAT)
+            fwave = sched.run_coalesced(fplan, cache=None)
+            sched.charge_queries(fwave, exact_cost, kind="exact")
+            sched.charge_batch_refine(fwave, x_dim)
+            fobjs = fwave.objs
+        else:
+            t_prefetch = sched.bt.compute_s  # all traversals retired
+        if prefetch_probes is not None:
+            # overlap the NEXT micro-batch's probe wave with this
+            # batch's refine/scan tail on the event clock
+            handle = sched.prefetch(prefetch_probes, keyspace,
+                                    probe_payload, cache=cfg.cache,
+                                    t_issue_s=t_prefetch)
+        batch_span = sched.finish_batch(cfg.mode)
     elif cfg.engine == "per_query":
         # seed data plane: blocking per-partition GETs, query by query
-        objs, n_store = _fetch_per_query(
-            probes_all, key_fn, store, resilient, cfg,
-            dead_shard_fallback, cfg.cache, timelines, degraded,
-            probe_cost, kind=probe_kind)
-        n_distinct = n_store + cb_fetch
+        plan = FetchPlan.build(probes_all, keyspace, probe_payload)
+        objs, _ = sched.run_per_query(plan, cache=cfg.cache,
+                                      scan_cost=probe_cost,
+                                      kind=probe_kind)
         if pq:
             if codebook is not None and objs:
-                refine_all = _adc_select(codebook, queries, probes_all,
-                                         objs, pag, cfg.rerank_k,
-                                         cfg.scan_block)
-            for tl in timelines:  # ADC retires before the refine wave
-                tl.barrier(cfg.mode)
-            fobjs, fn_store = _fetch_per_query(
-                refine_all, rkeys_of, store, resilient, cfg,
-                dead_shard_fallback, None, timelines, degraded,
-                exact_cost, kind="exact")
-            n_distinct += fn_store
+                refine_all = scan.adc_select(codebook, queries,
+                                             probes_all, objs, pag,
+                                             cfg.rerank_k)
+            sched.barrier(cfg.mode)  # ADC retires before the refine wave
+            fplan = FetchPlan.build(refine_all, keyspace, PAYLOAD_FLOAT)
+            fobjs, _ = sched.run_per_query(fplan, cache=None,
+                                           scan_cost=exact_cost,
+                                           kind="exact")
         batch_span = None  # serial stream: filled from latencies below
     else:
         raise ValueError(f"unknown engine: {cfg.engine!r}")
 
-    if resilient is not None:
-        n_open = resilient.n_open_breakers()
+    if sched.resilient is not None:
+        n_open = sched.resilient.n_open_breakers()
         for d in degraded:
             d.breakers_open = n_open
 
@@ -868,15 +481,18 @@ def search_pag(pag: PAG, x_dim: int, queries: np.ndarray,
             ids_list.append(_unpack_ids(obj[:, 0]))
             vec_list.append(obj[:, 1:])
         ids_cat = np.concatenate(ids_list)
-        keep = _dedup_first(ids_cat)
+        keep = dedup_first(ids_cat)
         pool_ids.append(ids_cat[keep])
         pool_vecs.append(np.concatenate(vec_list)[keep])
 
-    out_ids, out_d2 = _scan_pools(queries.astype(np.float32), pool_ids,
-                                  pool_vecs, cfg.k, cfg.scan_block)
+    out_ids, out_d2 = scan.topk(queries.astype(np.float32), pool_ids,
+                                pool_vecs, cfg.k)
 
-    stats = SearchStats([], [], [], n_distinct_fetches=n_distinct,
-                        degraded=degraded)
+    stats = SearchStats([], [], [],
+                        n_distinct_fetches=sched.n_store,
+                        degraded=degraded,
+                        n_prefetch_hits=sched.n_prefetch_hits,
+                        prefetch=handle)
     if cfg.cache is not None:
         stats.cache_hit_rate = cfg.cache.hit_rate
         stats.cache_bytes_evicted = cfg.cache.bytes_evicted
@@ -899,13 +515,16 @@ def search_pag(pag: PAG, x_dim: int, queries: np.ndarray,
                             bounds=COUNT_BUCKETS)
             metrics.observe("search.retries_per_query",
                             degraded[qi].retries, bounds=COUNT_BUCKETS)
+        if stats.n_prefetch_hits:
+            metrics.inc("search.prefetch_hits", stats.n_prefetch_hits)
         metrics.observe("search.batch_span_s", stats.batch_span_s)
     if rec:
         from repro.obs.trace import emit_search_spans
-        emit_search_spans(
+        stats.trace_group = emit_search_spans(
             tracer,
-            batch_events=(bt.events if bt is not None else None),
+            batch_events=(sched.bt.events
+                          if cfg.engine == "batched" else None),
             batch_span_s=stats.batch_span_s, timelines=timelines,
             latencies_s=stats.latencies_s, engine=cfg.engine, pq=pq,
-            n_probes=stats.n_probes)
+            n_probes=stats.n_probes, t0_s=trace_t0_s) or ""
     return out_ids, out_d2, stats

@@ -127,6 +127,44 @@ class MetricsRegistry:
         self._gauges.clear()
         self._hists.clear()
 
+    def to_openmetrics(self) -> str:
+        """OpenMetrics text exposition of the registry: counters as
+        ``<name>_total``, gauges bare, histograms as cumulative
+        ``_bucket{le="..."}`` series (with the mandatory ``+Inf``
+        bucket) plus ``_sum``/``_count``, terminated by ``# EOF``.
+        Metric names swap the registry's dots for underscores
+        (``storage.gets`` -> ``storage_gets``)."""
+        def name_of(n: str) -> str:
+            return n.replace(".", "_").replace("-", "_")
+
+        def value_of(v: float) -> str:
+            f = float(v)
+            if f == int(f) and abs(f) < 1e15:
+                return str(int(f))
+            return repr(f)   # repr round-trips; %g would lose digits
+
+        lines: List[str] = []
+        for name, c in sorted(self._counters.items()):
+            n = name_of(name)
+            lines.append(f"# TYPE {n} counter")
+            lines.append(f"{n}_total {value_of(c.value)}")
+        for name, g in sorted(self._gauges.items()):
+            n = name_of(name)
+            lines.append(f"# TYPE {n} gauge")
+            lines.append(f"{n} {value_of(g.value)}")
+        for name, h in sorted(self._hists.items()):
+            n = name_of(name)
+            lines.append(f"# TYPE {n} histogram")
+            acc = 0
+            for bound, cnt in zip(h.bounds, h.counts):
+                acc += cnt
+                lines.append(f'{n}_bucket{{le="{bound:g}"}} {acc}')
+            lines.append(f'{n}_bucket{{le="+Inf"}} {h.count}')
+            lines.append(f"{n}_sum {value_of(h.sum)}")
+            lines.append(f"{n}_count {h.count}")
+        lines.append("# EOF")
+        return "\n".join(lines) + "\n"
+
     def snapshot(self) -> Dict[str, float]:
         """One flat dict: counters and gauges by name; histograms
         flattened to .count/.sum/.mean/.max/.p50/.p99 + .le_* buckets."""

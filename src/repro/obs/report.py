@@ -27,14 +27,47 @@ def _fmt_s(t: float) -> str:
     return f"{t * 1e6:8.3f}us"
 
 
+def _tile_durs(tracer: Tracer, root: Span) -> Dict[str, float]:
+    """Total duration per compute-thread category under one batch root
+    (the slices tile the root, so the values sum to ~root.dur_s)."""
+    tile: Dict[str, float] = {c: 0.0 for c in _TILE_CATS}
+    for s in tracer.spans:
+        if s.track == root.track and s is not root \
+                and s.ph == "X" and s.cat in tile:
+            tile[s.cat] += s.dur_s
+    return tile
+
+
+def batch_tile_shares(tracer: Tracer, root: Span) -> Dict[str, float]:
+    """Machine-readable version of ``batch_breakdown``: fraction of the
+    batch span per tile category, keyed ``traversal`` / ``fetch_stall``
+    / ``scan`` / ``other`` (benchmarks compare these across configs)."""
+    tile = _tile_durs(tracer, root)
+    total = root.dur_s or 1.0
+    return {
+        "traversal": tile["compute"] / total,
+        "fetch_stall": tile["stall"] / total,
+        "scan": tile["scan"] / total,
+        "other": max(0.0, root.dur_s - sum(tile.values())) / total,
+    }
+
+
+def fetch_stall_share(tracer: Tracer) -> float:
+    """Aggregate fetch-stall share over every batch root in the trace:
+    total stalled compute-thread time / total batch span. The
+    prefetch-ahead acceptance metric (benchmarks/prefetch.py)."""
+    stall = span = 0.0
+    for r in tracer.roots("batch"):
+        stall += _tile_durs(tracer, r)["stall"]
+        span += r.dur_s
+    return stall / span if span else 0.0
+
+
 def batch_breakdown(tracer: Tracer, root: Span) -> str:
     """One batch root -> a small text table (see module docstring)."""
     kids = [s for s in tracer.spans
             if s.track == root.track and s is not root]
-    tile: Dict[str, float] = {c: 0.0 for c in _TILE_CATS}
-    for s in kids:
-        if s.ph == "X" and s.cat in tile:
-            tile[s.cat] += s.dur_s
+    tile = _tile_durs(tracer, root)
     total = root.dur_s or 1.0
     covered = sum(tile.values())
     args = root.args or {}

@@ -17,6 +17,12 @@ share a timeline). Three span shapes:
 * ``instant`` — a zero-duration marker (``ph: "i"``): retries,
   failovers, breaker skips, cache hits.
 
+Plus *flow arrows* (``flow()``: a ``ph: "s"`` / ``ph: "f"`` pair
+sharing one id) linking causally-related points on different tracks —
+the serving front-end draws one from each ticket span to the per-query
+child track its query landed on. Flows are emitted whole or not at all
+(balanced ids even under track/span caps).
+
 ``NoopTracer`` (module singleton ``NOOP_TRACER``) is the zero-cost
 default: ``enabled`` is False and every method is a bare ``pass`` —
 instrumentation sites guard heavy work behind ``tracer.enabled``.
@@ -38,9 +44,10 @@ class Span:
     t0_s: float               # start on the track's clock (seconds)
     dur_s: float
     cat: str = ""
-    ph: str = "X"             # "X" complete | "b/e" async | "i" instant
+    ph: str = "X"   # "X" complete | "b/e" async | "i" instant | "s/f" flow
     group: str = EVENT_GROUP  # process group (clock domain)
     args: Optional[Dict[str, Any]] = None
+    flow_id: int = 0          # shared id of a flow's "s"/"f" endpoints
 
     @property
     def t1_s(self) -> float:
@@ -65,6 +72,7 @@ class Tracer:
         self._tracks: Dict[str, int] = {}   # name -> creation order
         self._groups: Dict[str, int] = {}   # group counters (next_name)
         self._wall_t = 0.0                  # cursor of the wall track
+        self._flow_id = 0                   # flow-arrow id counter
 
     # ------------------------------------------------------------- tracks
     def track(self, name: str) -> Optional[str]:
@@ -108,6 +116,25 @@ class Tracer:
                 args: Optional[dict] = None) -> None:
         self._add(Span(track, name, t_s, 0.0, "mark", "i", EVENT_GROUP,
                        args))
+
+    def flow(self, from_track: str, t_from_s: float, to_track: str,
+             t_to_s: float, name: str = "flow") -> None:
+        """A flow arrow from one track's point to another's (Perfetto
+        renders it as an arc). All-or-nothing: if either endpoint's
+        track is over the cap or the span budget can't hold both
+        endpoints, the whole flow is dropped — exported "s"/"f" ids
+        always come in balanced pairs."""
+        if self.track(from_track) is None or self.track(to_track) is None:
+            self.n_dropped += 1
+            return
+        if len(self.spans) + 2 > self.max_spans:
+            self.n_dropped += 1
+            return
+        self._flow_id += 1
+        self.spans.append(Span(from_track, name, t_from_s, 0.0, "flow",
+                               "s", EVENT_GROUP, None, self._flow_id))
+        self.spans.append(Span(to_track, name, t_to_s, 0.0, "flow",
+                               "f", EVENT_GROUP, None, self._flow_id))
 
     def wall_span(self, name: str, dur_s: float,
                   args: Optional[dict] = None,
@@ -156,6 +183,12 @@ class Tracer:
                 ev.update(ph="b", id=aid)
                 events.append(ev)
                 events.append({**ev, "ph": "e", "ts": s.t1_s * 1e6})
+            elif s.ph == "s":
+                ev.update(ph="s", id=s.flow_id)
+                events.append(ev)
+            elif s.ph == "f":
+                ev.update(ph="f", bp="e", id=s.flow_id)
+                events.append(ev)
             else:
                 ev.update(ph="i", s="t")
                 events.append(ev)
@@ -195,6 +228,9 @@ class NoopTracer(Tracer):
         pass
 
     def instant(self, *a, **k):
+        pass
+
+    def flow(self, *a, **k):
         pass
 
     def wall_span(self, *a, **k):
@@ -247,9 +283,17 @@ def _emit_timeline_events(tracer: Tracer, track: str, events,
                         args={"stage": ev.stage})
 
 
+def _is_prefetch(ev) -> bool:
+    """Prefetch-wave io events belong to the NEXT batch's schedule; they
+    ride on this batch's clock as trace-only slices and must not widen
+    this batch's own fetch-wave stage extents."""
+    return ev.kind == "io" and ev.label.startswith("prefetch")
+
+
 def _stage_extent(events, kind: str, stage: int):
     ts = [(ev.t0_s, ev.t1_s) for ev in events
-          if ev.kind == kind and ev.stage == stage]
+          if ev.kind == kind and ev.stage == stage
+          and not _is_prefetch(ev)]
     if not ts:
         return None
     return min(t for t, _ in ts), max(t for _, t in ts)
@@ -257,20 +301,27 @@ def _stage_extent(events, kind: str, stage: int):
 
 def emit_search_spans(tracer: Tracer, *, batch_events, batch_span_s: float,
                       timelines, latencies_s, engine: str, pq: bool,
-                      n_probes=None, group: Optional[str] = None) -> str:
+                      n_probes=None, group: Optional[str] = None,
+                      t0_s: float = 0.0) -> str:
     """Emit one ``search_pag`` call as a span tree.
 
     * a batch track: root ``batch`` span of exactly ``batch_span_s``,
       compute/stall/scan children from the batch event clock (batched
       engine) or serialized per-query slices (per_query engine), plus
-      ``fetch_wave`` / ``adc_scan`` / ``refine_wave`` stage spans;
+      ``fetch_wave`` / ``adc_scan`` / ``refine_wave`` stage spans (and
+      ``prefetch_wave`` when the batch issued the next micro-batch's
+      objects mid-flight);
     * one track per traced query (capped by the tracer): root ``query``
       span of exactly that query's latency with its own probe children.
+
+    ``t0_s`` shifts the whole tree on the event clock — the serving
+    front-end passes its flush cursor so frontend and batch tracks
+    share one timeline (flow arrows then point forward in time).
 
     Returns the batch group name (track prefix)."""
     g = group or tracer.next_name("batch")
     q_count = len(timelines)
-    tracer.span(g, f"batch[{q_count}q]", 0.0, batch_span_s, cat="batch",
+    tracer.span(g, f"batch[{q_count}q]", t0_s, batch_span_s, cat="batch",
                 args={"engine": engine, "pq": pq, "queries": q_count})
 
     # per_query engine: the stream is serial on the batch clock — shift
@@ -284,12 +335,12 @@ def emit_search_spans(tracer: Tracer, *, batch_events, batch_span_s: float,
             off += latencies_s[qi]
 
     if batch_events is not None:
-        _emit_timeline_events(tracer, g, batch_events)
+        _emit_timeline_events(tracer, g, batch_events, t0_s)
         evs = batch_events
     else:
         for qi, tl in enumerate(timelines):
-            tracer.span(g, f"q{qi}", offsets[qi], latencies_s[qi],
-                        cat="scan", args={"stage": 0})
+            tracer.span(g, f"q{qi}", t0_s + offsets[qi],
+                        latencies_s[qi], cat="scan", args={"stage": 0})
         evs = [ev for tl in timelines for ev in tl.events]
 
     # stage spans on the batch track (async: they overlap compute)
@@ -300,7 +351,14 @@ def emit_search_spans(tracer: Tracer, *, batch_events, batch_span_s: float,
                                            scan_names[:1]):
         ext = _stage_extent(evs, kind, stage)
         if ext is not None:
-            tracer.aspan(g, name, ext[0], ext[1] - ext[0], cat="stage")
+            tracer.aspan(g, name, t0_s + ext[0], ext[1] - ext[0],
+                         cat="stage")
+    pf = [(ev.t0_s, ev.t1_s) for ev in evs if _is_prefetch(ev)]
+    if pf:
+        p0 = min(t for t, _ in pf)
+        tracer.aspan(g, "prefetch_wave", t0_s + p0,
+                     max(t for _, t in pf) - p0, cat="stage",
+                     args={"keys": len(pf)})
 
     for qi, tl in enumerate(timelines):
         track = tracer.track(f"{g}/q{qi}")
@@ -309,7 +367,8 @@ def emit_search_spans(tracer: Tracer, *, batch_events, batch_span_s: float,
         args = {"engine": engine}
         if n_probes is not None:
             args["n_probes"] = n_probes[qi]
-        tracer.span(track, f"query q{qi}", offsets[qi], latencies_s[qi],
-                    cat="query", args=args)
-        _emit_timeline_events(tracer, track, tl.events, offsets[qi])
+        tracer.span(track, f"query q{qi}", t0_s + offsets[qi],
+                    latencies_s[qi], cat="query", args=args)
+        _emit_timeline_events(tracer, track, tl.events,
+                              t0_s + offsets[qi])
     return g

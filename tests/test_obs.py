@@ -322,3 +322,110 @@ def test_bench_json_roundtrip(tmp_path):
     # emit() outside a collector must not leak into old lists
     emit("m/b", 1.0, "x=1")
     assert len(rows) == 1
+
+
+def test_flow_events_balanced_and_capped():
+    tr = Tracer()
+    tr.span("a", "root", 0.0, 1.0)
+    tr.flow("a", 0.0, "b", 0.5)
+    doc = tr.to_chrome()
+    starts = [e for e in doc["traceEvents"] if e.get("ph") == "s"]
+    ends = [e for e in doc["traceEvents"] if e.get("ph") == "f"]
+    assert len(starts) == len(ends) == 1
+    assert starts[0]["id"] == ends[0]["id"]
+    assert ends[0]["bp"] == "e"            # bind to enclosing slice
+    # over the span budget the WHOLE flow is dropped: ids stay balanced
+    tight = Tracer(max_spans=1)
+    tight.flow("a", 0.0, "b", 0.5)
+    assert tight.spans == [] and tight.n_dropped == 1
+    # over the track cap likewise
+    capped = Tracer(max_tracks=1)
+    capped.track("a")
+    capped.flow("a", 0.0, "b", 0.5)
+    assert capped.spans == []
+
+
+def test_frontend_flow_arrows_balanced(built_pag, small_ds):
+    """Every flushed ticket gets one flow arrow to its per-query track;
+    the exported Chrome JSON always has balanced "s"/"f" id pairs."""
+    from repro.core.distributed import ShardedServing
+    from repro.serving.engine import AnnsFrontend
+    store = _mk_store(built_pag, small_ds)
+    srv = ShardedServing(pag=built_pag, store=store, n_shards=4,
+                         dim=small_ds.d)
+    cfg = SearchConfig(L=32, k=10, n_probe_max=16)
+    tr = Tracer()
+    with observe(tracer=tr):
+        fe = AnnsFrontend(srv, cfg, max_batch=8)
+        for q in small_ds.queries[:6]:
+            fe.submit(q)
+        fe.flush()
+    doc = tr.to_chrome()
+    s_ids = sorted(e["id"] for e in doc["traceEvents"]
+                   if e.get("ph") == "s")
+    f_ids = sorted(e["id"] for e in doc["traceEvents"]
+                   if e.get("ph") == "f")
+    assert len(s_ids) == 6                  # one arrow per ticket
+    assert s_ids == f_ids                   # balanced, matching ids
+    assert len(set(s_ids)) == 6             # distinct arrows
+    # arrows start on the frontend track and land on a query track
+    flows = [s for s in tr.spans if s.ph == "s"]
+    assert all(s.track == "frontend" for s in flows)
+    lands = [s.track for s in tr.spans if s.ph == "f"]
+    assert all("/q" in t for t in lands)
+
+
+def _parse_openmetrics(text: str):
+    """Tiny OpenMetrics text parser: returns (types, samples) where
+    samples maps "name" or ("name", le) -> float."""
+    types, samples = {}, {}
+    lines = text.splitlines()
+    assert lines[-1] == "# EOF"
+    for line in lines[:-1]:
+        if line.startswith("# TYPE "):
+            _, _, name, kind = line.split(" ")
+            types[name] = kind
+            continue
+        assert not line.startswith("#")
+        name, val = line.rsplit(" ", 1)
+        if "{" in name:
+            base, label = name[:-1].split("{")
+            assert label.startswith('le="')
+            samples[(base, label[4:-1])] = float(val)
+        else:
+            samples[name] = float(val)
+    return types, samples
+
+
+def test_openmetrics_roundtrip():
+    mx = MetricsRegistry()
+    mx.inc("storage.gets", 3)
+    mx.inc("search.prefetch_hits", 12345678901234)  # big int: exact
+    mx.set_gauge("cache.hit_rate", 0.7071067811865476)
+    for v in (0.0, 1.0, 1.5, 300.0):
+        mx.observe("frontend.batch-size", v, bounds=COUNT_BUCKETS)
+    text = mx.to_openmetrics()
+    assert text.endswith("# EOF\n")
+    types, samples = _parse_openmetrics(text)
+    snap = mx.snapshot()
+
+    assert types["storage_gets"] == "counter"
+    assert samples["storage_gets_total"] == snap["storage.gets"]
+    assert samples["search_prefetch_hits_total"] == 12345678901234
+    assert types["cache_hit_rate"] == "gauge"
+    # repr round-trips full float precision (no %g truncation)
+    assert samples["cache_hit_rate"] == snap["cache.hit_rate"]
+
+    h = "frontend_batch_size"                  # dots AND dashes mapped
+    assert types[h] == "histogram"
+    assert samples[f"{h}_count"] == snap["frontend.batch-size.count"]
+    assert samples[f"{h}_sum"] == snap["frontend.batch-size.sum"]
+    assert samples[(f"{h}_bucket", "+Inf")] == 4
+    # cumulative buckets match the snapshot's .le_* series bound for
+    # bound and are monotone
+    acc = []
+    for b in COUNT_BUCKETS:
+        v = samples[(f"{h}_bucket", f"{b:g}")]
+        assert v == snap[f"frontend.batch-size.le_{b:g}"]
+        acc.append(v)
+    assert acc == sorted(acc)
